@@ -1,0 +1,126 @@
+"""Shared benchmark harness.
+
+Paper-scale numbers (LLaMA3-8B on WikiText-2) are not reproducible in this
+offline CPU container, so every table/figure is validated on a *trained*
+small LM over the deterministic synthetic corpus: the claims under test are
+the paper's orderings and trends (GPTQ < QuaRot < RSQ, chunk effects,
+strategy rankings, bit scaling), not absolute perplexities.  The model is
+trained once and cached under results/bench_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import RSQConfig, quantize_model
+from repro.data.loader import DataLoader
+from repro.data.synthetic import SyntheticCorpus
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+BENCH_ARCH_OVERRIDES = dict(
+    dtype="float32", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+    d_head=32, d_ff=256, vocab_size=512)
+
+TRAIN_STEPS = 800
+CALIB_N, CALIB_T = 32, 128
+SEED = 0
+
+
+def bench_config(arch: str = "llama3-8b"):
+    cfg = get_config(arch).reduced()
+    over = dict(BENCH_ARCH_OVERRIDES)
+    if cfg.family in ("ssm", "hybrid"):
+        over.pop("d_head")
+    if cfg.uses_moe:
+        over["moe_d_ff"] = 128
+    return dataclasses.replace(cfg, **over)
+
+
+def get_trained_model(arch: str = "llama3-8b", steps: int = TRAIN_STEPS,
+                      force: bool = False):
+    """Train (or load) the benchmark model. Returns (model, params, corpus)."""
+    cfg = bench_config(arch)
+    model = build_model(cfg)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=SEED)
+    ckpt_dir = RESULTS / "bench_model" / arch.replace("/", "_")
+    cm = CheckpointManager(ckpt_dir, keep=1)
+    like = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        model.param_shapes())
+    if not force and cm.latest_step() == steps:
+        _, state, _ = cm.restore(like={"params": like})
+        return model, state["params"], corpus
+
+    print(f"[bench] training {arch} proxy for {steps} steps...",
+          flush=True)
+    params = jax.jit(model.init)(jax.random.key(SEED))
+    opt = make_optimizer("adamw", cosine_schedule(5e-3, 40, steps),
+                         weight_decay=0.01)
+    opt_state = jax.jit(opt.init)(params)
+    loader = DataLoader(corpus, 16, CALIB_T)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    t0 = time.time()
+    for s in range(steps):
+        batch = next(loader)
+        params, opt_state, loss = step_fn(params, opt_state, batch,
+                                          jnp.int32(s))
+        if s % 100 == 0:
+            print(f"  step {s}: loss {float(loss):.3f}", flush=True)
+    print(f"  trained in {time.time() - t0:.0f}s, final loss "
+          f"{float(loss):.3f}", flush=True)
+    cm.save(steps, {"params": params}, blocking=True)
+    return model, params, corpus
+
+
+def eval_ppl(model, params, tokens, batch: int = 16) -> float:
+    loss_fn = jax.jit(model.loss)
+    tot, n = 0.0, 0
+    for i in range(0, tokens.shape[0], batch):
+        b = tokens[i : i + batch]
+        lbl = jnp.roll(b, -1, axis=1)
+        tot += float(loss_fn(params, {"tokens": b, "labels": lbl})) * b.shape[0]
+        n += b.shape[0]
+    return float(jnp.exp(tot / n))
+
+
+def calib_and_heldout(corpus, n=CALIB_N, t=CALIB_T):
+    calib = corpus.sample(jax.random.key(777), n, t)
+    heldout = corpus.sample(jax.random.key(999), n, t)
+    return calib, heldout
+
+
+def quantize_and_eval(model, params, corpus, rsq: RSQConfig,
+                      batch_size: int = 8) -> dict:
+    calib, heldout = calib_and_heldout(corpus)
+    t0 = time.time()
+    qparams, _ = quantize_model(model, params, calib, rsq,
+                                batch_size=batch_size)
+    dt = time.time() - t0
+    return {"ppl": eval_ppl(model, qparams, heldout),
+            "seconds": round(dt, 1)}
+
+
+class Table:
+    """Collects rows; prints the required ``name,us_per_call,derived`` CSV."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple] = []
+
+    def add(self, label: str, us_per_call: float, derived: str):
+        self.rows.append((label, us_per_call, derived))
+        print(f"{self.name}/{label},{us_per_call:.1f},{derived}", flush=True)
+
+    def dump(self, fh=sys.stdout):
+        for label, us, derived in self.rows:
+            print(f"{self.name}/{label},{us:.1f},{derived}", file=fh)

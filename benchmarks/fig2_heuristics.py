@@ -1,0 +1,33 @@
+"""Fig. 2 reproduction: First-N and First&Last-N vs number of used tokens.
+
+Paper claims: a sweet spot exists below T (fewest tokens is NOT best), and
+First&Last-N >= First-N at the optimum."""
+from __future__ import annotations
+
+from repro.core import RSQConfig
+
+from benchmarks.common import Table, get_trained_model, quantize_and_eval
+
+NS = (8, 32, 64, 128)  # T = 128 -> "all"
+
+
+def run(bits: int = 2, table: Table | None = None) -> dict:
+    table = table or Table("fig2_heuristics")
+    model, params, corpus = get_trained_model()
+    out = {}
+    for strat in ("first_n", "first_last_n"):
+        for n in NS:
+            rsq = RSQConfig(bits=bits, group_size=64, rotate=True,
+                            importance=strat, first_n=n)
+            ppl = quantize_and_eval(model, params, corpus, rsq)["ppl"]
+            out[f"{strat}_{n}"] = ppl
+            table.add(f"{strat}_N{n}", 0.0, f"ppl={ppl:.3f}")
+    best_first = min(out[f"first_n_{n}"] for n in NS)
+    table.add("claims", 0.0,
+              f"sweet spot below T: "
+              f"{best_first <= out['first_n_128'] + 1e-6 and out['first_n_8'] >= best_first}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

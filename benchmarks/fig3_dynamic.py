@@ -1,0 +1,30 @@
+"""Fig. 3 reproduction: the five dynamic strategies across r_min."""
+from __future__ import annotations
+
+from repro.core import RSQConfig
+
+from benchmarks.common import Table, get_trained_model, quantize_and_eval
+
+STRATEGIES = ("token_freq", "act_norm", "act_diff", "token_sim", "attn_con")
+R_MINS = (0.005, 0.05, 0.5)
+
+
+def run(bits: int = 2, table: Table | None = None) -> dict:
+    table = table or Table("fig3_dynamic")
+    model, params, corpus = get_trained_model()
+    out = {}
+    for strat in STRATEGIES:
+        for r_min in R_MINS:
+            rsq = RSQConfig(bits=bits, group_size=64, rotate=True,
+                            importance=strat, r_min=r_min)
+            ppl = quantize_and_eval(model, params, corpus, rsq)["ppl"]
+            out[f"{strat}@{r_min}"] = ppl
+            table.add(f"{strat}_rmin{r_min}", 0.0, f"ppl={ppl:.3f}")
+    best = {s: min(out[f"{s}@{r}"] for r in R_MINS) for s in STRATEGIES}
+    ranked = sorted(best, key=best.get)
+    table.add("claims", 0.0, f"ranking(best-first)={ranked}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

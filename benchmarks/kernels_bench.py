@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks.
+
+Wall times on this container are CPU-interpret-mode (NOT TPU performance);
+the derived column therefore also reports the *analytic TPU roofline time*
+per call from the kernel's bytes/FLOPs — the number the TPU deployment is
+judged against."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantSpec, quantize_weight_rtn
+from repro.kernels.attn_colsum.ops import attn_colsum
+from repro.kernels.gram.ops import weighted_gram
+from repro.kernels.hadamard.ops import fwht
+from repro.kernels.quant_matmul.ops import pack_weight, quant_matmul
+
+from benchmarks.common import Table
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(table: Table | None = None):
+    table = table or Table("kernels")
+
+    # hadamard: (n, d)
+    n, d = 512, 512
+    x = jax.random.normal(jax.random.key(0), (n, d))
+    us = _time(fwht, x)
+    flops = n * d * jnp.log2(d) * 2
+    tpu_us = max(float(flops) / PEAK_FLOPS, 4 * n * d * 2 / HBM_BW) * 1e6
+    table.add("fwht_512x512", us, f"tpu_roofline_us={tpu_us:.2f}")
+
+    # gram: (n, d)
+    n, d = 2048, 256
+    x = jax.random.normal(jax.random.key(1), (n, d))
+    r = jax.random.uniform(jax.random.key(2), (n,))
+    us = _time(weighted_gram, x, r)
+    flops = 2 * n * d * d
+    tpu_us = max(flops / PEAK_FLOPS, (n * d * 4 + d * d * 4) / HBM_BW) * 1e6
+    table.add("gram_2048x256", us, f"tpu_roofline_us={tpu_us:.2f}")
+
+    # quant matmul: decode-ish shape
+    m, k, nn = 8, 1024, 1024
+    w = jax.random.normal(jax.random.key(3), (k, nn)) * 0.3
+    spec = QuantSpec(bits=4, group_size=128, sym=False)
+    _, q, s, z = quantize_weight_rtn(w, spec)
+    pw = pack_weight(q, s, z, spec)
+    xx = jax.random.normal(jax.random.key(4), (m, k))
+    us = _time(lambda a: quant_matmul(a, pw), xx)
+    bytes_w = k * nn / 2  # int4
+    tpu_us = max(2 * m * k * nn / PEAK_FLOPS, bytes_w / HBM_BW) * 1e6
+    bf16_us = (k * nn * 2) / HBM_BW * 1e6
+    table.add("quant_matmul_w4_8x1024x1024", us,
+              f"tpu_roofline_us={tpu_us:.2f} vs bf16 {bf16_us:.2f} "
+              f"(4x weight-traffic win)")
+
+    # attn colsum
+    b, t, h, dh = 2, 512, 4, 64
+    q4 = jax.random.normal(jax.random.key(5), (b, t, h, dh))
+    k4 = jax.random.normal(jax.random.key(6), (b, t, h, dh))
+    us = _time(lambda a, c: attn_colsum(a, c), q4, k4)
+    flops = 2 * 2 * b * h * t * t * dh  # two passes
+    tpu_us = max(flops / PEAK_FLOPS,
+                 2 * b * h * t * dh * 4 / HBM_BW) * 1e6
+    table.add("attn_colsum_2x512x4x64", us,
+              f"tpu_roofline_us={tpu_us:.2f} (O(T) memory vs O(T^2) naive)")
+    return table
+
+
+if __name__ == "__main__":
+    run()

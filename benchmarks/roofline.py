@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+compiled dry-run:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_chip / HBM_bw              [s]
+    collective = link_bytes_per_chip / link_bw            [s]
+
+FLOPs/bytes come from the trip-count-aware HLO parser
+(runtime/hlo_analysis) — XLA's cost_analysis counts loop bodies once and
+would undercount scanned models by n_layers x.  Collective link bytes use
+ring-algorithm estimates per op.  MODEL_FLOPS = 6·N·D (train) or 2·N·D
+(inference) with N = active params.
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+
+def model_flops(rec: dict) -> float:
+    """Model-useful FLOPs per step (global)."""
+    from repro.configs import get_config, get_shape
+
+    cfg = get_config(rec["arch"])
+    n_active = cfg.n_params(active_only=True)
+    if rec["shape"] == "rsq_calib":
+        # one layer's calibration forward over 256 x 4096 tokens
+        return 2.0 * (n_active / cfg.n_layers) * 256 * 4096
+    shape = get_shape(rec["shape"])
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token
+
+
+def analyze_record(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    chips = 512 if rec["mesh"] == "multi" else 256
+    compute = hlo["dot_flops_per_device"] / PEAK_FLOPS
+    memory = hlo["bytes_accessed_per_device"] / HBM_BW
+    coll = hlo["collective_link_bytes_per_device"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec)
+    hlo_flops_global = hlo["dot_flops_per_device"] * chips
+    useful = mf / hlo_flops_global if hlo_flops_global else 0.0
+    # achievable step time >= max(terms); roofline fraction for the
+    # *compute* story = compute / bound
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant, "bound_s": bound,
+        "model_flops": mf, "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": compute / bound if bound else 0.0,
+        "peak_mem_gib": rec["memory"]["peak_per_device_bytes"] / 2 ** 30,
+        "mfu_bound": mf / chips / PEAK_FLOPS / bound if bound else 0.0,
+    }
+
+
+_MOVES = {
+    "compute": ("recompute/remat waste and attention over-compute: raise "
+                "useful-FLOPs ratio (less remat, fused attention kernel)"),
+    "memory": ("HBM traffic: fuse elementwise chains, quantize weights "
+               "(WoQ serving), larger block reuse in matmul tiles"),
+    "collective": ("collective bytes: reshard to cut all-gathers "
+                   "(sequence-parallel stash, 2D weight sharding), overlap "
+                   "collectives with compute, int8-compress gradients"),
+}
+
+
+def what_moves(dominant: str) -> str:
+    return _MOVES[dominant]
+
+
+def load_records(dry_dir: Path | None = None) -> list[dict]:
+    if dry_dir is None:
+        d2 = RESULTS / "dryrun2"
+        d = d2 if d2.exists() else (RESULTS / "dryrun")
+    else:
+        d = dry_dir
+    recs = []
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok" and "hlo" in r:
+            recs.append(r)
+    return recs
+
+
+def run(table=None, dry_dir: Path | None = None):
+    from benchmarks.common import Table
+
+    table = table or Table("roofline")
+    rows = [analyze_record(r) for r in load_records(dry_dir)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    for r in rows:
+        label = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        table.add(
+            label, r["bound_s"] * 1e6,
+            f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+            f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"mfu_bound={r['mfu_bound']:.2f}")
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | "
+           "collective (s) | dominant | useful/HLO | MFU bound | "
+           "peak GiB/dev |\n|---|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+        f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+        f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+        f"{r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.2f} | "
+        f"{r['peak_mem_gib']:.2f} |\n"
+        for r in rows)
+    return hdr + body
+
+
+if __name__ == "__main__":
+    rows = run()
+    out = RESULTS / "roofline.md"
+    out.write_text(to_markdown(rows))
+    print(f"wrote {out}")

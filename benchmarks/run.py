@@ -1,0 +1,58 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per row.  Times reported for
+quantization runs are pipeline wall-times on CPU; the scientific payload is
+the derived ppl / claim fields (see benchmarks/common.py docstring).
+
+  PYTHONPATH=src python -m benchmarks.run            # all tables
+  PYTHONPATH=src python -m benchmarks.run --only table2_main,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_heuristics, fig3_dynamic, fig4_expansion,
+                            kernels_bench, roofline, table1_chunks,
+                            table2_main, table4_calib, table5_bits,
+                            table6_vq)
+
+    benches = {
+        "table1_chunks": lambda t: table1_chunks.run(table=t),
+        "table2_main": lambda t: table2_main.run(table=t),
+        "fig2_heuristics": lambda t: fig2_heuristics.run(table=t),
+        "fig3_dynamic": lambda t: fig3_dynamic.run(table=t),
+        "fig4_expansion": lambda t: fig4_expansion.run(table=t),
+        "table4_calib": lambda t: table4_calib.run(table=t),
+        "table5_bits": lambda t: table5_bits.run(table=t),
+        "table6_vq": lambda t: table6_vq.run(table=t),
+        "kernels": lambda t: kernels_bench.run(table=t),
+        "roofline": lambda t: roofline.run(table=t),
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        if name not in benches:
+            print(f"unknown bench {name!r}", file=sys.stderr)
+            continue
+        t = Table(name)
+        try:
+            benches[name](t)
+        except Exception as e:  # keep the suite going
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+    print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

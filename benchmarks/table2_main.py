@@ -1,0 +1,51 @@
+"""Tab. 2 reproduction (proxy): GPTQ vs QuaRot vs RSQ.
+
+Paper claim: RSQ < QuaRot < GPTQ in perplexity (3-bit)."""
+from __future__ import annotations
+
+from repro.core import RSQConfig
+
+from benchmarks.common import (Table, eval_ppl, get_trained_model,
+                               calib_and_heldout, quantize_and_eval)
+
+METHODS = {
+    "gptq": RSQConfig(rotate=False, importance="uniform"),
+    "quarot": RSQConfig(rotate=True, importance="uniform"),
+    # scale-only (paper Fig. 9 "SQ"): isolates the token-importance
+    # contribution from rotation — our from-scratch proxy has no weight
+    # outliers, so rotation itself is expected to be ~neutral here
+    "sq": RSQConfig(rotate=False, importance="attn_con", r_min=0.5,
+                    expansion=2),
+    "rsq": RSQConfig(rotate=True, importance="attn_con", r_min=0.5,
+                     expansion=2),
+}
+
+
+def run(bits: int = 2, seeds=(0, 1), table: Table | None = None) -> dict:
+    import dataclasses
+
+    table = table or Table("table2_main")
+    model, params, corpus = get_trained_model()
+    _, heldout = calib_and_heldout(corpus)
+    fp = eval_ppl(model, params, heldout)
+    table.add("full_model", 0.0, f"ppl={fp:.3f}")
+    out = {}
+    for name, base in METHODS.items():
+        ppls = []
+        for s in seeds:
+            rsq = dataclasses.replace(base, bits=bits, group_size=64, seed=s)
+            ppls.append(quantize_and_eval(model, params, corpus, rsq)["ppl"])
+        mean = sum(ppls) / len(ppls)
+        std = (sum((p - mean) ** 2 for p in ppls) / len(ppls)) ** 0.5
+        out[name] = mean
+        table.add(name, 0.0, f"ppl={mean:.3f} std={std:.3f}")
+    table.add("claims", 0.0,
+              f"rsq<quarot: {out['rsq'] < out['quarot']}; "
+              f"sq<gptq (scaling helps): {out['sq'] < out['gptq']}; "
+              f"quarot-vs-gptq (outlier-free proxy, ~neutral expected): "
+              f"{out['quarot'] - out['gptq']:+.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Full RSQ workflow on a TRAINED model: train -> quantize (GPTQ / QuaRot /
+RSQ) -> evaluate held-out perplexity.  This is the paper's Tab. 2 in
+miniature (the benchmark suite runs the full grid; this example shows the
+workflow through the public API).
+
+    PYTHONPATH=src:. python examples/quantize_then_eval.py --steps 300
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import (calib_and_heldout, eval_ppl,
+                               get_trained_model, quantize_and_eval)
+from repro.core import RSQConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--bits", type=int, default=2)
+    args = ap.parse_args()
+
+    model, params, corpus = get_trained_model(steps=args.steps)
+    _, heldout = calib_and_heldout(corpus)
+    print(f"fp32 held-out ppl: {eval_ppl(model, params, heldout):.3f}")
+    for name, rsq in {
+        "GPTQ": RSQConfig(bits=args.bits, group_size=32, rotate=False,
+                          importance="uniform"),
+        "QuaRot": RSQConfig(bits=args.bits, group_size=32, rotate=True,
+                            importance="uniform"),
+        "RSQ": RSQConfig(bits=args.bits, group_size=32, rotate=True,
+                         importance="attn_con", expansion=2),
+    }.items():
+        res = quantize_and_eval(model, params, corpus, rsq)
+        print(f"{name:7s} {args.bits}-bit: ppl={res['ppl']:.3f} "
+              f"({res['seconds']}s)")
+
+
+if __name__ == "__main__":
+    main()

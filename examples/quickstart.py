@@ -1,0 +1,49 @@
+"""Quickstart: quantize a small LM with RSQ and compare against GPTQ/QuaRot.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains nothing — uses a randomly initialized tiny model so it finishes in
+~2 minutes; see examples/quantize_then_eval.py for the trained-model
+version whose perplexities are meaningful.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import RSQConfig, quantize_model
+from repro.data.synthetic import SyntheticCorpus
+from repro.models import build_model
+
+
+def main():
+    cfg = dataclasses.replace(get_config("llama3-8b").reduced(),
+                              dtype="float32")
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+    calib = corpus.sample(jax.random.key(1), 16, 128)
+
+    def ppl(p):
+        return float(jnp.exp(model.loss(
+            p, {"tokens": calib, "labels": jnp.roll(calib, -1, 1)})))
+
+    print(f"fp32 model: ppl={ppl(params):.2f}")
+    for name, rsq in {
+        "GPTQ  (no rotation, uniform)": RSQConfig(bits=3, rotate=False,
+                                                  importance="uniform"),
+        "QuaRot (rotation, uniform)  ": RSQConfig(bits=3, rotate=True,
+                                                  importance="uniform"),
+        "RSQ   (rotation + AttnCon)  ": RSQConfig(bits=3, rotate=True,
+                                                  importance="attn_con"),
+    }.items():
+        qparams, report = quantize_model(model, params, calib, rsq,
+                                         batch_size=8)
+        n_w = sum(len(l["weights"]) for l in report["layers"].values())
+        print(f"{name}: ppl={ppl(qparams):.2f}  ({n_w} weights @ "
+              f"{rsq.bits}-bit)")
+
+
+if __name__ == "__main__":
+    main()

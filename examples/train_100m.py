@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LLaMA-style model for a few
+hundred steps on the synthetic corpus, with checkpointing + fault tolerance.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+
+On this CPU container a step takes a few seconds (use ``--smoke`` for CI
+sizes); the same code path with a production mesh context trains on a real
+pod.  ~100M params: 12 layers x d_model 768 x d_ff 2048, vocab 32k.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.loader import DataLoader
+from repro.data.synthetic import SyntheticCorpus
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+from repro.runtime.fault import StepRunner
+
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32768, d_head=64,
+    rope_theta=10_000.0, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink the model for CI (seconds, not minutes)")
+    args = ap.parse_args()
+
+    cfg = CFG_100M if not args.smoke else dataclasses.replace(
+        CFG_100M, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=1024)
+    print(f"{cfg.name}: {cfg.n_params() / 1e6:.1f}M params", flush=True)
+
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    opt = make_optimizer("adamw", cosine_schedule(6e-4, 40, args.steps),
+                         weight_decay=0.01)
+    opt_state = jax.jit(opt.init)(params)
+    loader = DataLoader(SyntheticCorpus(cfg.vocab_size, seed=0),
+                        args.batch, args.seq)
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    runner = StepRunner(step_fn, ckpt, save_every=100)
+    out = runner.run(params, opt_state, loader, args.steps)
+    print(f"final loss {out['losses'][-1]:.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Config registry: ``get_config(name)`` / ``list_configs()`` / SHAPES."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+
+_MODULES = {
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "mamba2-780m": "mamba2_780m",
+    "minitron-4b": "minitron_4b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "command-r-35b": "command_r_35b",
+    "qwen1.5-4b": "qwen15_4b",
+    "whisper-medium": "whisper_medium",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "llama3-8b": "rsq_llama3_8b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _MODULES if k != "llama3-8b")
+
+
+def list_configs() -> tuple[str, ...]:
+    return tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).reduced()
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]

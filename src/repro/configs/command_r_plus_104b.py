@@ -1,0 +1,20 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — GQA, no-bias.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    d_head=128,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,
+    optimizer="adamw8bit",
+    microbatch=4,
+)

@@ -1,0 +1,6 @@
+"""RSQ (Rotate, Scale, then Quantize) — the paper's primary contribution."""
+from repro.core.gptq import gptq_quantize, gptq_quantize_ref  # noqa: F401
+from repro.core.importance import STRATEGIES, get_strategy  # noqa: F401
+from repro.core.pipeline import RSQConfig, RSQPipeline, quantize_model  # noqa: F401
+from repro.core.quantizer import QuantSpec, quantize_weight_rtn  # noqa: F401
+from repro.core.rotation import random_hadamard, rotate_model  # noqa: F401

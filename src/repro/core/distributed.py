@@ -1,0 +1,50 @@
+"""Distributed RSQ: how the calibration pipeline scales to a pod.
+
+Two independent axes of parallelism, matching DESIGN.md §5:
+
+  * data-parallel Hessians — calibration tokens shard over the data axes;
+    the (d, d) weighted gram update is a contraction over the sharded token
+    dim, so GSPMD reduces it with one psum per batch.  H stays replicated
+    (it is consumed by a device-local Cholesky).
+
+  * weight-parallel solves — GPTQ solves for different weights (all
+    experts of a layer, or same-shaped weights across layers) are
+    independent: `gptq_quantize_batched` vmaps the blocked solver so one
+    pjit call distributes the batch over the model axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gptq import gptq_quantize
+from repro.core.quantizer import QuantSpec
+from repro.runtime.sharding import ParallelCtx
+
+
+def make_sharded_hessian_fn(ctx: ParallelCtx):
+    """Returns jitted f(h, x, r) -> h + 2 XᵀR²X with X token-sharded."""
+
+    def acc(h, x, r):
+        xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        xf = xf * r.reshape(-1, 1)
+        upd = 2.0 * xf.T @ xf
+        return (h + upd if h is not None else upd)
+
+    if not ctx.enabled:
+        return jax.jit(acc)
+    x_sh = ctx.sharding("dp", None, None)
+    h_sh = ctx.sharding(None, None)
+    r_sh = ctx.sharding("dp", None)
+    return jax.jit(acc, in_shardings=(h_sh, x_sh, r_sh), out_shardings=h_sh)
+
+
+@partial(jax.jit, static_argnames=("spec", "block"))
+def gptq_quantize_batched(ws: jax.Array, hs: jax.Array, spec: QuantSpec,
+                          *, damp: float = 0.01, block: int = 128):
+    """ws: (N, d_in, d_out); hs: (N, d_in, d_in) — batched independent
+    solves (vmapped; under pjit the N axis shards over the model axis)."""
+    fn = lambda w, h: gptq_quantize(w, h, spec, damp=damp, block=block)
+    return jax.vmap(fn)(ws, hs)

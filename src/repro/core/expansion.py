@@ -1,0 +1,17 @@
+"""Dataset expansion (paper Sec. 4.4): augment each calibration sample with
+M-1 circular shifts by k·T/M so every token visits the "important"
+positions (initial/final) that position-biased strategies favor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expand_dataset(tokens: jnp.ndarray, m: int = 8) -> jnp.ndarray:
+    """tokens: (N, T) -> (N * M, T); shift k inserts the last k·T/M tokens at
+    the beginning (circular roll)."""
+    if m <= 1:
+        return tokens
+    n, t = tokens.shape
+    shifts = [(k * t) // m for k in range(m)]
+    rolled = [jnp.roll(tokens, s, axis=1) for s in shifts]
+    return jnp.stack(rolled, axis=1).reshape(n * m, t)

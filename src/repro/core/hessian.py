@@ -1,0 +1,32 @@
+"""Step 3 input: weighted second-order statistics H = 2 · X R² Xᵀ.
+
+``accumulate`` is the pure-jnp oracle; the Pallas ``gram`` kernel
+(kernels/gram) computes the same tiled product on TPU.  The distributed
+variant shards calibration tokens over the data axes and psums the (d, d)
+Hessian — see core/distributed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accumulate(h: jax.Array | None, x: jax.Array, r: jax.Array | None = None,
+               *, use_kernel: bool = False) -> jax.Array:
+    """h: (d, d) fp32 or None; x: (N, d) tokens-by-features;
+    r: (N,) token importances (None = uniform).  Returns h + 2·XᵀR²X."""
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if r is not None:
+        xf = xf * r.reshape(-1, 1).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.gram import ops as gram_ops
+        upd = 2.0 * gram_ops.weighted_gram(xf)
+    else:
+        upd = 2.0 * xf.T @ xf
+    if h is None:
+        return upd
+    return h + upd
+
+
+def hessian_diag_mean(h: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.diag(h))

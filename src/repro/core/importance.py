@@ -1,0 +1,125 @@
+"""Step 2 of RSQ: Scale — token-importance strategies (paper Sec. 4.3).
+
+Every strategy maps per-layer inputs Z (B, T, d) (+ optional attention
+column sums / token ids) to importances R (B, T).  Dynamic strategies are
+normalized into [r_min, r_max] per sample (paper Eq. 4).  Heuristics
+(First-N / First&Last-N) emit {0, 1} masks.
+
+``AttnCon`` — the adopted default — is the per-token attention column mass
+sum_{m,i} A[m, i, j], computed streamingly by the attention layer (see
+models/attention.flash_attention(colsum=True) and the attn_colsum Pallas
+kernel); attention-free layers (Mamba) fall back to ActNorm, per
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ImportanceInputs:
+    z_in: jax.Array  # (B, T, d) layer input features
+    z_out: Optional[jax.Array] = None  # (B, T, d) layer output (ActDiff)
+    tokens: Optional[jax.Array] = None  # (B, T) token ids (TokenFreq)
+    attn_colsum: Optional[jax.Array] = None  # (B, T) attention column mass
+    token_counts: Optional[jax.Array] = None  # (vocab,) corpus counts
+
+
+def normalize_scores(r: jax.Array, r_min: float, r_max: float) -> jax.Array:
+    """Paper Eq. 4: per-sample linear map into [r_min, r_max]."""
+    lo = jnp.min(r, axis=-1, keepdims=True)
+    hi = jnp.max(r, axis=-1, keepdims=True)
+    return r_min + (r - lo) / jnp.maximum(hi - lo, 1e-12) * (r_max - r_min)
+
+
+def uniform(inp: ImportanceInputs, **kw) -> jax.Array:
+    b, t, _ = inp.z_in.shape
+    return jnp.ones((b, t), jnp.float32)
+
+
+def first_n(inp: ImportanceInputs, *, n: int = 1024, **kw) -> jax.Array:
+    b, t, _ = inp.z_in.shape
+    return jnp.broadcast_to((jnp.arange(t) < n).astype(jnp.float32), (b, t))
+
+
+def first_last_n(inp: ImportanceInputs, *, n: int = 1024, **kw) -> jax.Array:
+    b, t, _ = inp.z_in.shape
+    idx = jnp.arange(t)
+    mask = (idx < n // 2) | (idx >= t - n // 2)
+    return jnp.broadcast_to(mask.astype(jnp.float32), (b, t))
+
+
+def token_freq(inp: ImportanceInputs, *, r_min: float = 0.01,
+               r_max: float = 1.0, **kw) -> jax.Array:
+    assert inp.tokens is not None and inp.token_counts is not None
+    raw = -inp.token_counts[inp.tokens].astype(jnp.float32)
+    return normalize_scores(raw, r_min, r_max)
+
+
+def act_norm(inp: ImportanceInputs, *, r_min: float = 0.005,
+             r_max: float = 1.0, **kw) -> jax.Array:
+    raw = jnp.linalg.norm(inp.z_in.astype(jnp.float32), axis=-1)
+    return normalize_scores(raw, r_min, r_max)
+
+
+def act_diff(inp: ImportanceInputs, *, r_min: float = 0.01,
+             r_max: float = 1.0, **kw) -> jax.Array:
+    assert inp.z_out is not None
+    diff = (inp.z_out - inp.z_in).astype(jnp.float32)
+    raw = -jnp.linalg.norm(diff, axis=-1)
+    return normalize_scores(raw, r_min, r_max)
+
+
+def token_sim(inp: ImportanceInputs, *, r_min: float = 0.005,
+              r_max: float = 1.0, chunk: int = 512, **kw) -> jax.Array:
+    """Sum of pairwise L2 distances to all other tokens (chunked over T)."""
+    z = inp.z_in.astype(jnp.float32)
+    b, t, d = z.shape
+    sq = jnp.sum(z * z, axis=-1)  # (B, T)
+
+    def dist_to_all(z_c, sq_c):
+        # z_c: (B, c, d) -> sum_j ||z_c_i - z_j||
+        d2 = (sq_c[:, :, None] + sq[:, None, :]
+              - 2.0 * jnp.einsum("bcd,btd->bct", z_c, z))
+        return jnp.sum(jnp.sqrt(jnp.maximum(d2, 0.0)), axis=-1)  # (B, c)
+
+    chunk = min(chunk, t)
+    if t % chunk == 0:
+        n = t // chunk
+        zc = z.reshape(b, n, chunk, d).swapaxes(0, 1)
+        sc = sq.reshape(b, n, chunk).swapaxes(0, 1)
+        raw = jax.lax.map(lambda xs: dist_to_all(*xs), (zc, sc))
+        raw = raw.swapaxes(0, 1).reshape(b, t)
+    else:
+        raw = dist_to_all(z, sq)
+    return normalize_scores(raw, r_min, r_max)
+
+
+def attn_con(inp: ImportanceInputs, *, r_min: float = 0.01,
+             r_max: float = 1.0, **kw) -> jax.Array:
+    if inp.attn_colsum is None:  # attention-free layer -> ActNorm fallback
+        return act_norm(inp, r_min=r_min, r_max=r_max)
+    return normalize_scores(inp.attn_colsum.astype(jnp.float32), r_min, r_max)
+
+
+STRATEGIES: dict[str, Callable] = {
+    "uniform": uniform,
+    "first_n": first_n,
+    "first_last_n": first_last_n,
+    "token_freq": token_freq,
+    "act_norm": act_norm,
+    "act_diff": act_diff,
+    "token_sim": token_sim,
+    "attn_con": attn_con,
+}
+
+
+def get_strategy(name: str) -> Callable:
+    if name not in STRATEGIES:
+        raise KeyError(f"unknown importance strategy {name!r}; "
+                       f"known: {sorted(STRATEGIES)}")
+    return STRATEGIES[name]

@@ -1,0 +1,311 @@
+"""RSQ layer-wise quantization pipeline (Rotate -> Scale -> Quantize).
+
+Drives the whole recipe over a model:
+  0. dataset expansion (circular shifts, Sec 4.4)
+  1. fuse norms + rotate the model (QuaRot step; skippable -> GPTQ baseline)
+  2. layer-by-layer: capture per-weight inputs (with attention column sums),
+     compute token importance R, accumulate H_w = 2 X R^2 X^T per weight,
+     run GPTQ (or LDLQ+E8 VQ), write back, propagate *quantized* outputs to
+     the next layer (standard GPTQ error-feedback scheme).
+
+Baselines are config points: GPTQ = no rotation + uniform; QuaRot =
+rotation + uniform; RSQ = rotation + a token-importance strategy.
+
+Scale notes: calibration batches stream through jitted capture functions;
+Hessian accumulation is O(d^2) state per weight (one layer's worth at a
+time).  The distributed variants (data-parallel Hessians, weight-parallel
+solves) live in core/distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hessian as hess
+from repro.core.expansion import expand_dataset
+from repro.core.gptq import gptq_quantize
+from repro.core.importance import ImportanceInputs, get_strategy
+from repro.core.ldlq import ldlq_quantize
+from repro.core.quantizer import QuantSpec
+from repro.core.rotation import rotate_model
+from repro.models.layers import rms_norm
+from repro.models.lm import Model, apply_block, capture_block
+
+
+@dataclasses.dataclass(frozen=True)
+class RSQConfig:
+    bits: int = 3
+    group_size: int = 128
+    sym: bool = True
+    rotate: bool = True
+    importance: str = "attn_con"  # see core.importance.STRATEGIES
+    r_min: float = 0.01
+    r_max: float = 1.0
+    first_n: int = 1024  # for the First-N / First&Last-N heuristics
+    expansion: int = 1  # dataset expansion factor M (paper: 8)
+    damp: float = 0.01
+    method: str = "gptq"  # gptq | ldlq (E8 vector quantization)
+    gptq_block: int = 128
+    seed: int = 0
+    # restrict the loss to a token chunk (Tab. 1 reproduction):
+    chunk_lo: float = 0.0
+    chunk_hi: float = 1.0
+
+    def spec(self) -> QuantSpec:
+        return QuantSpec(bits=self.bits, group_size=self.group_size,
+                         sym=self.sym)
+
+
+def _strategy_kwargs(rsq: RSQConfig) -> dict:
+    if rsq.importance in ("first_n", "first_last_n"):
+        return {"n": rsq.first_n}
+    if rsq.importance == "uniform":
+        return {}
+    return {"r_min": rsq.r_min, "r_max": rsq.r_max}
+
+
+def _chunk_mask(r: jax.Array, rsq: RSQConfig) -> jax.Array:
+    """Tab.-1 style chunk restriction on top of any strategy."""
+    if rsq.chunk_lo <= 0.0 and rsq.chunk_hi >= 1.0:
+        return r
+    t = r.shape[-1]
+    idx = jnp.arange(t)
+    mask = (idx >= int(rsq.chunk_lo * t)) & (idx < int(rsq.chunk_hi * t))
+    return r * mask.astype(r.dtype)
+
+
+_QUANT_SKIP = ("router",)  # routers stay fp32 (standard MoE practice)
+
+
+def _is_quantizable(path: str, arr) -> bool:
+    if any(s in path for s in _QUANT_SKIP):
+        return False
+    return arr.ndim >= 2 and min(arr.shape[-2:]) >= 16
+
+
+def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
+                           rsq: RSQConfig) -> tuple[dict, dict]:
+    """Solve GPTQ/LDLQ for every captured weight of one block."""
+    report = {}
+    new_p = jax.tree.map(lambda x: x, p_block)
+
+    def solve(w, h):
+        d_in = w.shape[0]
+        block = min(rsq.gptq_block, d_in)
+        if rsq.method == "ldlq":
+            out = ldlq_quantize(w, h, damp=rsq.damp, block=block)
+        else:
+            spec = rsq.spec()
+            gs = spec.group_size
+            if gs != -1 and (gs > block or block % gs or d_in % gs):
+                spec = dataclasses.replace(spec, group_size=-1)
+            out = gptq_quantize(w, h, spec, damp=rsq.damp, block=block)
+        return out["w_deq"], float(out["err"])
+
+    for path, h in hessians.items():
+        parts = path.split("/")
+        # resolve the weight inside the block params
+        node = new_p
+        for key in parts[:-1]:
+            node = node[key]
+        name = parts[-1]
+        w = node[name]
+        if not _is_quantizable(path, w):
+            continue
+        if w.ndim == 3:  # stacked experts: batched solve (vmapped on TPU)
+            outs = [solve(w[e], h[e]) for e in range(w.shape[0])]
+            node[name] = jnp.stack([o[0] for o in outs]).astype(w.dtype)
+            report[path] = float(np.mean([o[1] for o in outs]))
+        else:
+            deq, err = solve(w, h)
+            node[name] = deq.astype(w.dtype)
+            report[path] = err
+    return new_p, report
+
+
+class RSQPipeline:
+    def __init__(self, model: Model, rsq: RSQConfig):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.rsq = rsq
+        self.strategy = get_strategy(rsq.importance)
+        self.skw = _strategy_kwargs(rsq)
+
+    # ---------------------------------------------------------------- utils
+    def _importance(self, z_in, z_out, tokens, colsum, counts):
+        inp = ImportanceInputs(z_in=z_in, z_out=z_out, tokens=tokens,
+                               attn_colsum=colsum, token_counts=counts)
+        r = self.strategy(inp, **self.skw)
+        return _chunk_mask(r, self.rsq)
+
+    def _accumulate(self, hessians, caps, dom, r):
+        """Add one batch's contribution to every weight Hessian."""
+        slot_token = caps.get("ffn/__moe_slot_token")
+        for path, x_c in caps.items():
+            if path.endswith("__moe_slot_token"):
+                continue
+            d = dom[path]
+            if d in ("stream", "hidden"):
+                r_rows = r.reshape(-1)
+            elif d == "media":
+                r_rows = None
+            else:  # expert buffers (E, C, d): scatter r into slots
+                rf = jnp.concatenate([r.reshape(-1), jnp.zeros((1,))])
+                r_rows = rf[slot_token]  # (E*C,)
+            if x_c.ndim == 3 and d == "expert":
+                e, c, din = x_c.shape
+                xr = (x_c.reshape(e * c, din).astype(jnp.float32)
+                      * r_rows[:, None]).reshape(e, c, din)
+                upd = 2.0 * jnp.einsum("ecd,ecf->edf", xr, xr)
+                hessians[path] = upd if path not in hessians else (
+                    hessians[path] + upd)
+            else:
+                x2 = x_c.reshape(-1, x_c.shape[-1])
+                hessians[path] = hess.accumulate(
+                    hessians.get(path), x2, r_rows)
+        return hessians
+
+    # ----------------------------------------------------------------- main
+    def run(self, params: dict, calib_tokens, *, batch_size: int = 8,
+            media=None, frames=None, verbose: bool = False):
+        """Quantize `params`. calib_tokens: (N, T) int32 (pre-expansion).
+
+        Returns (new_params, report)."""
+        model, cfg, rsq = self.model, self.cfg, self.rsq
+        key = jax.random.key(rsq.seed)
+        report: dict[str, Any] = {"layers": {}, "rsq": dataclasses.asdict(rsq)}
+
+        calib = expand_dataset(jnp.asarray(calib_tokens), rsq.expansion)
+        counts = jnp.bincount(calib.reshape(-1),
+                              length=cfg.vocab_size).astype(jnp.float32)
+
+        if rsq.rotate:
+            params, rotations = rotate_model(params, cfg, model, key)
+            report["rotated"] = True
+        else:
+            params = dict(params)
+            rotations = {}
+        # decouple the mutable containers we write into from the caller's
+        new_params = dict(params)
+        if "prefix" in new_params:
+            new_params["prefix"] = list(new_params["prefix"])
+        new_params["groups"] = dict(new_params["groups"])
+        if "encoder" in new_params:
+            new_params["encoder"] = dict(new_params["encoder"])
+
+        n = calib.shape[0]
+        batches = [calib[i : i + batch_size]
+                   for i in range(0, n, batch_size)]
+        embed = params["embed"]
+        acts = [jnp.asarray(embed[b_]).astype(model.dtype) for b_ in batches]
+        t = calib.shape[1]
+        positions = jnp.arange(t)
+
+        media_b = None
+        if media is not None:
+            media_b = [media[i : i + batch_size] for i in range(0, n, batch_size)]
+
+        # ---------- encoder stack (enc-dec models) then decoder stack
+        enc_out = None
+        if cfg.family == "encdec":
+            assert frames is not None
+            frames = jnp.asarray(frames)
+            if "frame_proj" in params:
+                frames = frames @ params["frame_proj"].astype(frames.dtype)
+            enc_acts = [frames[i : i + batch_size]
+                        for i in range(0, n, batch_size)]
+            for li in range(cfg.n_encoder_layers):
+                p_blk = jax.tree.map(lambda a: a[li],
+                                     params["encoder"]["groups"])["b0"]
+                p_new, enc_acts, rep = self._quantize_one_layer(
+                    p_blk, model.enc_metas[0], enc_acts, None, calib,
+                    batch_size, counts, positions, verbose,
+                    tag=f"enc{li}")
+                report["layers"][f"enc{li}"] = rep
+                new_params["encoder"]["groups"] = jax.tree.map(
+                    lambda full, nw: full.at[li].set(nw),
+                    new_params["encoder"]["groups"], {"b0": p_new})
+            enc_acts = [rms_norm(a, params["encoder"]["final_norm"],
+                                 cfg.norm_eps) for a in enc_acts]
+            media_b = enc_acts
+
+        # ---------- decoder prefix + groups
+        def layer_params(li):
+            if li < len(model.prefix_metas):
+                return params["prefix"][li], model.prefix_metas[li], ("prefix", li)
+            j = li - len(model.prefix_metas)
+            g, o = divmod(j, model.period)
+            blk = jax.tree.map(lambda a: a[g], params["groups"])[f"b{o}"]
+            return blk, model.group_metas[o], ("groups", g, o)
+
+        n_layers = len(model.prefix_metas) + model.n_groups * model.period
+        for li in range(n_layers):
+            p_blk, meta, loc = layer_params(li)
+            p_new, acts, rep = self._quantize_one_layer(
+                p_blk, meta, acts, media_b, calib, batch_size, counts,
+                positions, verbose, tag=f"layer{li}")
+            report["layers"][f"layer{li}"] = rep
+            if loc[0] == "prefix":
+                new_params["prefix"][loc[1]] = p_new
+            else:
+                _, g, o = loc
+                stacked = new_params["groups"]
+
+                def set_at(full, nw, g=g):
+                    return full.at[g].set(nw.astype(full.dtype))
+
+                stacked[f"b{o}"] = jax.tree.map(
+                    set_at, stacked[f"b{o}"], p_new)
+                new_params["groups"] = stacked
+
+        report["rotations"] = {k: (None if v is None else "set")
+                               for k, v in rotations.items()}
+        return new_params, report
+
+    def _quantize_one_layer(self, p_blk, meta, acts, media_b, calib,
+                            batch_size, counts, positions, verbose, tag=""):
+        cfg, rsq = self.cfg, self.rsq
+        t0 = time.time()
+        dom_holder: dict[str, str] = {}
+
+        def _cap(p, x, med):
+            y, caps, dom, colsum = capture_block(p, cfg, meta, x,
+                                                 positions=positions,
+                                                 media=med)
+            dom_holder.update(dom)  # static strings — captured at trace time
+            return y, caps, colsum
+
+        cap_fn = jax.jit(_cap)
+        app_fn = jax.jit(
+            lambda p, x, med: apply_block(p, cfg, meta, x,
+                                          positions=positions, media=med)[0])
+        hessians: dict[str, Any] = {}
+        importances = []
+        for bi, x_b in enumerate(acts):
+            med = media_b[bi] if media_b is not None else None
+            tok = calib[bi * batch_size : bi * batch_size + x_b.shape[0]]
+            y_b, caps, colsum = cap_fn(p_blk, x_b, med)
+            r = self._importance(x_b, y_b, tok, colsum, counts)
+            importances.append(r)
+            hessians = self._accumulate(hessians, caps, dom_holder, r)
+        p_new, rep = quantize_layer_weights(p_blk, hessians, rsq)
+        # propagate quantized outputs
+        new_acts = [app_fn(p_new, x_b,
+                           media_b[bi] if media_b is not None else None)
+                    for bi, x_b in enumerate(acts)]
+        rep = {"weights": rep, "seconds": round(time.time() - t0, 2)}
+        if verbose:
+            print(f"  [{tag}] {len(rep['weights'])} weights quantized "
+                  f"in {rep['seconds']}s", flush=True)
+        return p_new, new_acts, rep
+
+
+def quantize_model(model: Model, params: dict, calib_tokens,
+                   rsq: RSQConfig, **kw):
+    return RSQPipeline(model, rsq).run(params, calib_tokens, **kw)

@@ -1,0 +1,98 @@
+"""Scalar weight quantizer: 2/3/4/8-bit, symmetric/asymmetric, per-group
+scales along the input dim, plus int32 bit-packing for the serving kernel.
+
+Layout convention: weights are (d_in, d_out); GPTQ iterates the d_in rows
+(the "columns" of the transposed GPTQ paper view).  A group is ``group_size``
+consecutive d_in rows sharing one (scale, zero) pair per output column.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 3
+    group_size: int = 128  # -1: one group spanning all of d_in
+    sym: bool = True
+
+    @property
+    def maxq(self) -> int:
+        return 2 ** self.bits - 1
+
+    def groups_for(self, d_in: int) -> int:
+        gs = d_in if self.group_size == -1 else self.group_size
+        assert d_in % gs == 0, (d_in, gs)
+        return d_in // gs
+
+
+def find_params(w_group: jax.Array, spec: QuantSpec):
+    """w_group: (gs, d_out) -> (scale, zero) each (d_out,)."""
+    wf = w_group.astype(jnp.float32)
+    maxq = spec.maxq
+    if spec.sym:
+        amax = jnp.max(jnp.abs(wf), axis=0)
+        scale = jnp.maximum(2.0 * amax / maxq, 1e-9)
+        zero = jnp.full_like(scale, (maxq + 1) // 2)
+    else:
+        lo = jnp.minimum(jnp.min(wf, axis=0), 0.0)
+        hi = jnp.maximum(jnp.max(wf, axis=0), 0.0)
+        scale = jnp.maximum((hi - lo) / maxq, 1e-9)
+        zero = jnp.round(-lo / scale)
+    return scale, zero
+
+
+def quantize_rtn(w: jax.Array, scale, zero, spec: QuantSpec):
+    """Round-to-nearest. w: (..., d_out); scale/zero broadcastable."""
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale) + zero, 0, spec.maxq)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, scale, zero):
+    return scale * (q.astype(jnp.float32) - zero)
+
+
+def quantize_weight_rtn(w: jax.Array, spec: QuantSpec):
+    """Plain RTN over the whole weight (baseline / no Hessian).
+
+    Returns (w_deq, q, scales, zeros); scales/zeros: (n_groups, d_out)."""
+    d_in, d_out = w.shape
+    g = spec.groups_for(d_in)
+    gs = d_in // g
+    wg = w.reshape(g, gs, d_out)
+    scale, zero = jax.vmap(lambda x: find_params(x, spec))(wg)
+    q = quantize_rtn(wg, scale[:, None], zero[:, None], spec)
+    deq = dequantize(q, scale[:, None], zero[:, None])
+    return (deq.reshape(d_in, d_out).astype(w.dtype),
+            q.reshape(d_in, d_out), scale, zero)
+
+
+# ------------------------------------------------------------------- packing
+
+
+def values_per_word(bits: int) -> int:
+    return 32 // bits  # 3-bit stores 10 values (2 bits wasted)
+
+
+def pack_codes(q: jax.Array, bits: int) -> jax.Array:
+    """q: (d_in, d_out) int codes -> (ceil(d_in/vpw), d_out) int32."""
+    vpw = values_per_word(bits)
+    d_in, d_out = q.shape
+    pad = (-d_in) % vpw
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, d_out), q.dtype)], axis=0)
+    qw = q.reshape(-1, vpw, d_out).astype(jnp.uint32)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :, None]
+    return jnp.sum(qw << shifts, axis=1).astype(jnp.uint32)
+
+
+def unpack_codes(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
+    """(n_words, d_out) uint32 -> (d_in, d_out) int32 codes."""
+    vpw = values_per_word(bits)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :, None]
+    mask = jnp.uint32(2 ** bits - 1)
+    vals = (packed[:, None, :] >> shifts) & mask
+    return vals.reshape(-1, packed.shape[-1])[:d_in].astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticCorpus, zipf_tokens  # noqa: F401
+from repro.data.calibration import calibration_set  # noqa: F401
+from repro.data.loader import DataLoader  # noqa: F401

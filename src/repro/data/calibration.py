@@ -1,0 +1,14 @@
+"""Calibration-set construction for the RSQ pipeline: n_samples x seq_len
+token matrix + the paper's dataset-expansion hook (core/expansion)."""
+from __future__ import annotations
+
+import jax
+
+from repro.data.synthetic import SyntheticCorpus
+
+
+def calibration_set(vocab_size: int, n_samples: int, seq_len: int,
+                    seed: int = 0, corpus: SyntheticCorpus | None = None):
+    corpus = corpus or SyntheticCorpus(vocab_size=vocab_size, seed=seed)
+    key = jax.random.fold_in(jax.random.key(seed), 777)
+    return corpus.sample(key, n_samples, seq_len)

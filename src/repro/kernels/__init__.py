@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for RSQ's compute hot-spots.
+
+Each subpackage holds kernel.py (pl.pallas_call + BlockSpec), ops.py (the
+jit'd public wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle).
+
+  hadamard     — blocked fast Walsh-Hadamard transform (the Rotate step)
+  gram         — weighted Hessian accumulation 2·XR²Xᵀ (the Scale step)
+  quant_matmul — packed int4/int2/int8 dequant-matmul (quantized serving)
+  attn_colsum  — streaming attention column sums (AttnCon importance)
+"""

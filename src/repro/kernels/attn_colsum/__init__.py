@@ -1,0 +1,1 @@
+from repro.kernels.attn_colsum.ops import attn_colsum  # noqa: F401

@@ -1,0 +1,29 @@
+"""Public wrapper: multi-head AttnCon scores for the RSQ pipeline.
+
+Accepts (B, T, H, Dh) q/k (GQA k is repeated to H), returns the paper's
+R_j = sum_{heads, queries} A[h, i, j] of shape (B, T)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attn_colsum.kernel import attn_colsum_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attn_colsum(q: jax.Array, k: jax.Array, *, causal: bool = True,
+                blk: int = 256) -> jax.Array:
+    b, t, h, dh = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    while t % blk:
+        blk //= 2
+    col = attn_colsum_pallas(qf, kf, causal=causal, blk=max(blk, 1),
+                             interpret=_interpret())
+    return col.reshape(b, h, t).sum(axis=1)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: materialize softmax(q kᵀ) and column-sum it."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attn_colsum_ref(q: jax.Array, k: jax.Array, *,
+                    causal: bool = True) -> jax.Array:
+    """q, k: (BH, T, d) -> (BH, T)."""
+    bh, t, d = q.shape
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    return jnp.sum(a, axis=1)  # sum over queries -> per-key mass

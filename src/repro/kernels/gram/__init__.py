@@ -1,0 +1,1 @@
+from repro.kernels.gram.ops import weighted_gram  # noqa: F401

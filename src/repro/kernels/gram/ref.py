@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the weighted gram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_gram_ref(x: jax.Array, r: jax.Array | None = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if r is not None:
+        xf = xf * r.reshape(-1, 1).astype(jnp.float32)
+    return xf.T @ xf

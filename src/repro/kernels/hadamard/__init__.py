@@ -1,0 +1,1 @@
+from repro.kernels.hadamard.ops import fwht, hadamard_transform  # noqa: F401

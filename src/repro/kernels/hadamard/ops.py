@@ -1,0 +1,55 @@
+"""Public wrapper: fast Hadamard transform for arbitrary dims.
+
+d = 2^k * m is handled as H_{2^k} (x) Q_m (Q_m: caller-supplied orthogonal
+factor, e.g. from core.rotation.random_orthogonal): reshape to (..., m, 2^k),
+FWHT the power-of-two axis with the Pallas kernel, then one dense matmul
+over the m axis.  On non-TPU backends the kernel runs in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hadamard.kernel import fwht_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fwht(x: jax.Array, rows_blk: int = 256) -> jax.Array:
+    """Orthonormal FWHT over the last dim (power of two)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    blk = rows_blk
+    while n % blk:
+        blk //= 2
+    out = fwht_pallas(x2, rows_blk=max(blk, 1), interpret=_interpret())
+    return out.reshape(shape)
+
+
+def hadamard_transform(x: jax.Array, q_m: jax.Array | None = None) -> jax.Array:
+    """Apply (H_{2^k} (x) Q_m) to the last dim of x; d = 2^k * m.
+
+    Matches core.rotation conventions: y = x @ (H (x) Q_m) where the
+    Kronecker factors act as  (x) -> reshape (…, 2^k, m)."""
+    d = x.shape[-1]
+    k2 = 1
+    while d % (2 * k2) == 0:
+        k2 *= 2
+    m = d // k2
+    if m == 1:
+        return fwht(x)
+    assert q_m is not None and q_m.shape == (m, m)
+    lead = x.shape[:-1]
+    xr = x.reshape(*lead, k2, m)
+    # Q_m on the trailing (m) axis
+    xr = jnp.einsum("...km,mn->...kn", xr.astype(jnp.float32),
+                    q_m.astype(jnp.float32))
+    # FWHT on the 2^k axis
+    xr = jnp.swapaxes(xr, -1, -2)  # (..., m, k2)
+    xr = fwht(xr.reshape(-1, k2)).reshape(*lead, m, k2)
+    out = jnp.swapaxes(xr, -1, -2).reshape(*lead, d)
+    return out.astype(x.dtype)

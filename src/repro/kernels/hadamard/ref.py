@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the FWHT kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hadamard_matrix(n: int) -> jax.Array:
+    h = jnp.ones((1, 1), jnp.float32)
+    while h.shape[0] < n:
+        h = jnp.block([[h, h], [h, -h]])
+    return h / jnp.sqrt(jnp.asarray(n, jnp.float32))
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Orthonormal Walsh-Hadamard transform along the last dim."""
+    d = x.shape[-1]
+    return (x.astype(jnp.float32) @ hadamard_matrix(d)).astype(x.dtype)

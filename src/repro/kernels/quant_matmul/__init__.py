@@ -1,0 +1,1 @@
+from repro.kernels.quant_matmul.ops import quant_matmul  # noqa: F401

@@ -1,0 +1,80 @@
+"""Packed weight-only quantized matmul: y = x @ dequant(W_packed).
+
+TPU analogue of Marlin-style CUDA WoQ GEMMs: int codes are packed
+``values_per_word`` per uint32 along d_in; the kernel unpacks a
+(k_blk, n_blk) weight tile in VMEM with shift/mask VPU ops, applies the
+per-group (scale, zero), and feeds the MXU in the compute dtype.  Packing
+cuts HBM weight traffic by 16/bits vs bf16 — decode-shape GEMMs are
+memory-bound, so that factor is the speedup bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, *,
+                bits: int, vpw: int, group_size: int, k_blk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (m_blk, k_blk)
+    wq = wq_ref[...]  # (k_blk // vpw, n_blk) uint32
+    # unpack: (k_blk//vpw, vpw, n_blk) -> (k_blk, n_blk)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :, None]
+    mask = jnp.uint32(2 ** bits - 1)
+    codes = ((wq[:, None, :] >> shifts) & mask).astype(jnp.float32)
+    codes = codes.reshape(k_blk, -1)
+    # per-group scale/zero: groups along k within the block
+    scale = scale_ref[...].astype(jnp.float32)  # (k_blk//gs, n_blk)
+    zero = zero_ref[...].astype(jnp.float32)
+    reps = k_blk // scale.shape[0]
+    scale = jnp.repeat(scale, reps, axis=0)
+    zero = jnp.repeat(zero, reps, axis=0)
+    w = scale * (codes - zero)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "m_blk", "n_blk", "k_blk", "interpret"))
+def quant_matmul_pallas(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                        zero: jax.Array, *, bits: int, group_size: int,
+                        m_blk: int = 128, n_blk: int = 256, k_blk: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """x: (m, k); w_packed: (k // vpw, n) uint32; scale/zero: (k // gs, n).
+
+    Returns (m, n) in x.dtype (fp32 accumulation)."""
+    m, k = x.shape
+    vpw = 32 // bits
+    n = w_packed.shape[1]
+    m_blk = min(m_blk, m)
+    n_blk = min(n_blk, n)
+    k_blk = min(k_blk, k)
+    assert m % m_blk == 0 and n % n_blk == 0 and k % k_blk == 0
+    assert k_blk % vpw == 0 and k_blk % group_size == 0
+    kernel = functools.partial(_qmm_kernel, bits=bits, vpw=vpw,
+                               group_size=group_size, k_blk=k_blk)
+    grid = (m // m_blk, n // n_blk, k // k_blk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_blk, k_blk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((k_blk // vpw, n_blk), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((k_blk // group_size, n_blk),
+                         lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((k_blk // group_size, n_blk),
+                         lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, n_blk), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_packed, scale, zero)
+    return out.astype(x.dtype)

@@ -1,0 +1,66 @@
+"""Public wrapper: weight-only quantized GEMM for serving.
+
+Use ``pack_weight`` once offline (after the RSQ pipeline), then
+``quant_matmul(x, packed)`` at serving time.  Only power-of-two bit widths
+ride the packed kernel (int3 packing wastes 2 bits/word and breaks the
+k-tiling alignment; 3-bit deployments dequantize via ref — documented in
+DESIGN.md)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantSpec, pack_codes
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    w_packed: jax.Array  # (k // vpw, n) uint32
+    scale: jax.Array  # (k // gs, n)
+    zero: jax.Array
+    bits: int
+    group_size: int
+    d_in: int
+
+
+def pack_weight(q: jax.Array, scale: jax.Array, zero: jax.Array,
+                spec: QuantSpec) -> PackedWeight:
+    d_in = q.shape[0]
+    gs = d_in if spec.group_size == -1 else spec.group_size
+    return PackedWeight(
+        w_packed=pack_codes(q, spec.bits), scale=scale, zero=zero,
+        bits=spec.bits, group_size=gs, d_in=d_in)
+
+
+def quant_matmul(x: jax.Array, pw: PackedWeight) -> jax.Array:
+    m, k = x.shape
+    vpw = 32 // pw.bits
+    aligned = (32 % pw.bits == 0 and pw.d_in % vpw == 0
+               and k % 128 == 0 and pw.w_packed.shape[1] % 128 == 0
+               and m % 8 == 0)
+    if not aligned or pw.bits == 3:
+        return quant_matmul_ref(x, pw.w_packed, pw.scale, pw.zero,
+                                bits=pw.bits, group_size=pw.group_size,
+                                d_in=pw.d_in)
+    k_blk = 512
+    while k % k_blk or k_blk % pw.group_size:
+        k_blk //= 2
+    m_blk = 128
+    while m % m_blk:
+        m_blk //= 2
+    n = pw.w_packed.shape[1]
+    n_blk = 256
+    while n % n_blk:
+        n_blk //= 2
+    return quant_matmul_pallas(
+        x, pw.w_packed, pw.scale, pw.zero, bits=pw.bits,
+        group_size=pw.group_size, m_blk=m_blk, n_blk=n_blk, k_blk=k_blk,
+        interpret=_interpret())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: unpack + dequantize + matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import unpack_codes
+
+
+def quant_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                     zero: jax.Array, *, bits: int, group_size: int,
+                     d_in: int | None = None) -> jax.Array:
+    k = d_in if d_in is not None else x.shape[-1]
+    codes = unpack_codes(w_packed, bits, k).astype(jnp.float32)
+    s = jnp.repeat(scale.astype(jnp.float32), group_size, axis=0)[:k]
+    z = jnp.repeat(zero.astype(jnp.float32), group_size, axis=0)[:k]
+    w = s * (codes - z)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# placeholder devices and record memory / cost / collective statistics.
+#
+# The two lines above MUST stay first — jax locks the device count on first
+# initialization (hence also: no ``from __future__`` here).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+#       --shape train_4k --mesh single --out results/dryrun
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, get_shape
+from repro.launch.mesh import make_ctx, make_production_mesh
+from repro.launch.specs import batch_inputs, decode_inputs
+from repro.launch.steps import (
+    make_prefill_step,
+    make_rsq_calib_step,
+    make_serve_step,
+    make_train_step,
+    rsq_calib_inputs,
+    sharded_args_train,
+    sharded_params,
+)
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+from repro.runtime.hlo_analysis import analyze_hlo
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Path, *, save_hlo: bool = False,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    if shape_name == "rsq_calib":
+        # the paper-technique cell: one layer's calibration pass at the
+        # paper's setup (256 samples x 4096 tokens)
+        from repro.configs.base import ShapeConfig
+        shape = ShapeConfig("rsq_calib", "train", 4096, 256)
+    else:
+        shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    ctx = make_ctx(mesh, ep=True)
+    model = build_model(cfg, ctx)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "status": "ok",
+        "n_params": cfg.n_params(),
+        "n_params_active": cfg.n_params(active_only=True),
+        "optimizer": cfg.optimizer,
+    }
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape_name == "rsq_calib":
+            step_fn = make_rsq_calib_step(model)
+            args = rsq_calib_inputs(model, shape, ctx)
+            jitted = jax.jit(step_fn, donate_argnums=(2,))
+        elif shape.kind == "train":
+            opt = make_optimizer(cfg.optimizer,
+                                 cosine_schedule(3e-4, 100, 10_000))
+            step_fn = make_train_step(model, opt)
+            batch = batch_inputs(cfg, shape, ctx)
+            args = sharded_args_train(model, opt, batch, ctx)
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(model, shape.seq_len)
+            params = sharded_params(model, ctx)
+            batch = batch_inputs(cfg, shape, ctx)
+            args = (params, batch)
+            jitted = jax.jit(step_fn)
+        else:  # decode: serving-specific (2-D weight) sharding rules
+            import dataclasses as _dc
+            ctx_d = _dc.replace(ctx, mode="decode")
+            model = build_model(cfg, ctx_d)
+            step_fn = make_serve_step(model)
+            params = sharded_params(model, ctx_d)
+            cache, token, pos = decode_inputs(model, cfg, shape, ctx_d)
+            args = (params, cache, token, pos)
+            jitted = jax.jit(step_fn, donate_argnums=(1,))
+
+        lowered = jitted.lower(*args)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_bytes": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        record["cost_analysis"] = {
+            k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca}
+        hlo_text = compiled.as_text()
+        record["hlo"] = analyze_hlo(hlo_text)
+        if save_hlo:
+            import gzip
+            with gzip.open(
+                    out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt.gz",
+                    "wt") as f:
+                f.write(hlo_text)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=0)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = list(ASSIGNED_ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                name = f"{arch}__{shape_name}__{mesh_kind}"
+                path = out_dir / f"{name}.json"
+                if args.skip_existing and path.exists():
+                    print(f"[skip] {name}")
+                    continue
+                print(f"[cell] {name} ...", flush=True)
+                try:
+                    over = {"kv_bits": args.kv_bits} if args.kv_bits else None
+                    rec = run_cell(arch, shape_name, mesh_kind, out_dir,
+                                   save_hlo=args.save_hlo, overrides=over)
+                except Exception as e:  # record the failure, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                path.write_text(json.dumps(rec, indent=2, default=str))
+                status = rec["status"]
+                mem = rec.get("memory", {}).get("peak_per_device_bytes")
+                mem_s = f" peak/dev={mem/2**30:.2f}GiB" if mem else ""
+                print(f"[done] {name}: {status}"
+                      f" lower={rec.get('lower_s')}s"
+                      f" compile={rec.get('compile_s')}s{mem_s}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

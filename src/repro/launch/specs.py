@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins (with shardings) for every model input of every
+(architecture x input-shape) cell — nothing is allocated; ``jit.lower`` takes
+these directly.
+
+Cache shardings follow a memory-first rule set:
+  * batch-dim -> data axes when divisible;
+  * KV sequence dim -> model axis (context parallelism) when divisible;
+  * for global_batch=1 long-context decode, the sequence dim is sharded over
+    *all* mesh axes (the only way a 500k-token cache fits per chip);
+  * SSM states shard heads on the model axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.runtime.sharding import ParallelCtx
+
+
+def _sds(shape, dtype, ctx: ParallelCtx, spec: P | None):
+    if not ctx.enabled:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(ctx.mesh, spec or P()))
+
+
+def _axis_size(ctx: ParallelCtx, axes) -> int:
+    if not ctx.enabled:
+        return 1
+    return math.prod(ctx.mesh.shape[a] for a in axes)
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeConfig, ctx: ParallelCtx,
+                 dtype=jnp.bfloat16) -> dict[str, Any]:
+    """Training / prefill batch specs."""
+    b, t = shape.global_batch, shape.seq_len
+    dp = ctx.dp
+    tok_spec = P(dp if len(dp) != 1 else dp[0], None) if dp else None
+    batch = {"tokens": _sds((b, t), jnp.int32, ctx, tok_spec)}
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, t), jnp.int32, ctx, tok_spec)
+    if cfg.family == "vlm":
+        mspec = P(dp if len(dp) != 1 else dp[0], None, None) if dp else None
+        batch["media"] = _sds((b, cfg.n_media_tokens, cfg.d_model), dtype,
+                              ctx, mspec)
+    if cfg.family == "encdec":
+        fspec = P(dp if len(dp) != 1 else dp[0], None, None) if dp else None
+        batch["frames"] = _sds((b, t, cfg.d_model), dtype, ctx, fspec)
+    return batch
+
+
+def _dp_entry(ctx: ParallelCtx):
+    return ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]
+
+
+def cache_shardings(cache_shapes, cfg: ModelConfig, shape: ShapeConfig,
+                    ctx: ParallelCtx):
+    """Assign a NamedSharding to every cache leaf (by key name + shape)."""
+    b = shape.global_batch
+    dp_size = _axis_size(ctx, ctx.dp)
+    tp_size = _axis_size(ctx, (ctx.tp,)) if ctx.tp else 1
+    all_axes = tuple(ctx.dp) + ((ctx.tp,) if ctx.tp else ())
+    all_size = dp_size * tp_size
+    dp_ok = dp_size > 0 and b % dp_size == 0
+    dp_e = _dp_entry(ctx)
+
+    def seq_entry(s):
+        """sharding entry for a KV sequence dim of size s"""
+        if dp_ok:
+            return ctx.tp if (ctx.tp and s % tp_size == 0) else None
+        if s % all_size == 0:
+            return all_axes
+        if ctx.tp and s % tp_size == 0:
+            return ctx.tp
+        return None
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        nd = leaf.ndim
+        stacked = "groups" in keys
+        off = 1 if stacked else 0  # leading n_groups axis
+        base = [None] * (nd - off)
+        bdim = 0
+        if name in ("k", "v", "c", "r", "ks", "vs"):
+            if dp_ok:
+                base[bdim] = dp_e
+            base[1] = seq_entry(leaf.shape[off + 1])
+        elif name == "conv":
+            if dp_ok:
+                base[bdim] = dp_e
+        elif name == "ssm":
+            if dp_ok:
+                base[bdim] = dp_e
+            nh = leaf.shape[off + 1]
+            if ctx.tp and nh % tp_size == 0:
+                base[1] = ctx.tp
+        elif name in ("kv", "cross_kv") or "kv" in keys or "cross_kv" in keys:
+            if dp_ok:
+                base[bdim] = dp_e
+        elif name == "media":
+            if dp_ok:
+                base[bdim] = dp_e
+        spec = P(*([None] * off + base))
+        return NamedSharding(ctx.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def decode_inputs(model, cfg: ModelConfig, shape: ShapeConfig,
+                  ctx: ParallelCtx, dtype=jnp.bfloat16):
+    """(cache_sds, token_sds, pos_sds) for serve_step lowering."""
+    b, s = shape.global_batch, shape.seq_len
+    media = None
+    if cfg.family == "vlm":
+        media = jax.ShapeDtypeStruct((b, cfg.n_media_tokens, cfg.d_model),
+                                     dtype)
+    elif cfg.family == "encdec":
+        # encoder output held as the cross-attention cache (30 s ~ 1500 frames)
+        media = jax.ShapeDtypeStruct((b, 1500, cfg.d_model), dtype)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(b, s, media=media))
+    if ctx.enabled:
+        shardings = cache_shardings(cache_shapes, cfg, shape, ctx)
+        cache = jax.tree.map(
+            lambda sh, nsh: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                                 sharding=nsh),
+            cache_shapes, shardings)
+    else:
+        cache = cache_shapes
+    dp_size = _axis_size(ctx, ctx.dp)
+    tok_spec = (P(_dp_entry(ctx), None)
+                if ctx.enabled and ctx.dp and b % dp_size == 0 else P())
+    token = _sds((b, 1), jnp.int32, ctx, tok_spec)
+    pos = _sds((), jnp.int32, ctx, P())
+    return cache, token, pos

@@ -1,0 +1,255 @@
+"""Step builders (train / prefill / serve) plus optimizer-state sharding
+derivation.  These are the exact functions the dry-run lowers and the real
+drivers execute."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.lm import Model
+from repro.optim import Optimizer
+from repro.runtime.sharding import ParallelCtx, param_specs
+
+
+def make_train_step(model: Model, opt: Optimizer):
+    ctx = model.ctx
+    pspecs = model.param_specs() if ctx.enabled else None
+    n_mb = max(1, model.cfg.microbatch)
+    acc_dtype = jnp.dtype(model.cfg.grad_accum_dtype)
+
+    def constrain_grads(grads):
+        if not ctx.enabled:
+            return grads
+        # pin gradient (and hence optimizer-temp) sharding to the param
+        # sharding — keeps fp32 update intermediates distributed
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(ctx.mesh, s)), grads, pspecs)
+
+    def train_step(params, opt_state, batch, step):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            # gradient accumulation: activations / backward stash scale with
+            # the microbatch, the accumulator lives in `grad_accum_dtype`
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]),
+                batch)
+
+            def body(carry, mbatch):
+                acc, loss_sum = carry
+                loss, grads = jax.value_and_grad(model.loss)(params, mbatch)
+                grads = constrain_grads(grads)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), acc, grads)
+                return (acc, loss_sum + loss), None
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            acc0 = constrain_grads(acc0)
+            (grads, loss_sum), _ = jax.lax.scan(body, (acc0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss_sum / n_mb
+        new_params, new_state = opt.update(params, grads, opt_state, step)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model, seq_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"],
+                             media=batch.get("media"),
+                             frames=batch.get("frames"),
+                             cache_len=seq_len)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step
+
+
+def make_rsq_calib_step(model: Model):
+    """One distributed RSQ calibration step for a representative layer:
+    capture per-weight inputs, compute AttnCon importance, accumulate the
+    weighted Hessians H_w += 2·X R² Xᵀ.  Calibration tokens shard over the
+    data axes; the (d, d) Hessians come out replicated (GSPMD reduces the
+    token contraction with one psum per weight) — the RSQ-specific cell of
+    the dry-run/roofline tables."""
+    from repro.core.importance import ImportanceInputs, attn_con
+    from repro.models.lm import capture_block
+    import jax.numpy as jnp
+
+    cfg = model.cfg
+    meta = model.group_metas[-1]
+
+    def rsq_calib_step(p_block, x, hessians):
+        t = x.shape[1]
+        pos = jnp.arange(t)
+        y, caps, dom, colsum = capture_block(p_block, cfg, meta, x,
+                                             positions=pos)
+        r = attn_con(ImportanceInputs(z_in=x, attn_colsum=colsum),
+                     r_min=0.01)
+        new_h = {}
+        for path, x_c in caps.items():
+            if path.endswith("__moe_slot_token") or path not in hessians:
+                continue
+            if x_c.ndim == 3 and dom.get(path) == "expert":
+                e = x_c.shape[0]
+                rf = jnp.concatenate([r.reshape(-1), jnp.zeros((1,))])
+                r_slots = rf[caps["ffn/__moe_slot_token"]]
+                xr = (x_c.reshape(e, -1, x_c.shape[-1]).astype(jnp.float32)
+                      * r_slots.reshape(e, -1, 1))
+                new_h[path] = hessians[path] + 2.0 * jnp.einsum(
+                    "ecd,ecf->edf", xr, xr)
+            else:
+                x2 = x_c.reshape(-1, x_c.shape[-1]).astype(jnp.float32)
+                if dom.get(path) in ("stream", "hidden"):
+                    x2 = x2 * r.reshape(-1, 1)
+                new_h[path] = hessians[path] + 2.0 * x2.T @ x2
+        return new_h, y
+
+    return rsq_calib_step
+
+
+def rsq_calib_inputs(model: Model, shape, ctx: ParallelCtx):
+    """SDS args for make_rsq_calib_step: (block params, x, hessians)."""
+    import jax.numpy as jnp
+    from repro.models.lm import capture_block
+
+    cfg = model.cfg
+    meta = model.group_metas[-1]
+    pshapes = model.param_shapes()
+    block_shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(
+        a.shape[1:], a.dtype), pshapes["groups"][f"b{model.period - 1}"])
+    pspecs = param_specs(pshapes, ctx)["groups"][f"b{model.period - 1}"]
+
+    def strip(s, spec):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(ctx.mesh, P(*list(spec)[1:])))
+
+    p_block = jax.tree.map(strip, block_shapes, pspecs)
+    b, t = shape.global_batch, shape.seq_len
+    dp_e = ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]
+    x = jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.dtype(cfg.dtype),
+                             sharding=NamedSharding(ctx.mesh,
+                                                    P(dp_e, None, None)))
+    # derive Hessian shapes from an abstract capture (dom is static strings
+    # collected during tracing; caps come back as ShapeDtypeStructs)
+    dom: dict = {}
+
+    def _cap(p, xx):
+        y, caps, d, _ = capture_block(p, cfg, meta, xx,
+                                      positions=jnp.arange(32))
+        dom.update(d)
+        return caps
+
+    caps = jax.eval_shape(
+        _cap, block_shapes,
+        jax.ShapeDtypeStruct((2, 32, cfg.d_model), jnp.dtype(cfg.dtype)))
+    # §Perf iteration (rsq_calib cell): store H sharded over the model axis
+    # — the per-batch token-contraction reduction lowers to reduce-scatter
+    # (half the link bytes of the replicated-H all-reduce) and the (d, d)
+    # state is 1/16 per chip; the solver gathers H once per layer.
+    import os
+    dp_e = ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]
+    h_spec = (P() if os.environ.get("REPRO_BASELINE")
+              else P(dp_e, ctx.tp))
+    hessians = {}
+    for path, c in caps.items():
+        if path.endswith("__moe_slot_token"):
+            continue
+        d = c.shape[-1]
+        if c.ndim == 3 and dom.get(path) == "expert":
+            hessians[path] = jax.ShapeDtypeStruct(
+                (c.shape[0], d, d), jnp.float32,
+                sharding=NamedSharding(ctx.mesh, P(ctx.tp, None, None)))
+        else:
+            sp = (h_spec if d % ctx.axis_size("tp") == 0
+                  and d % ctx.axis_size("dp") == 0 else P())
+            hessians[path] = jax.ShapeDtypeStruct(
+                (d, d), jnp.float32,
+                sharding=NamedSharding(ctx.mesh, sp))
+    return p_block, x, hessians
+
+
+# ----------------------------------------------------- optimizer state specs
+
+
+def _adapt_spec(spec: P, pshape, sshape) -> P:
+    """Map a param PartitionSpec onto an optimizer-state leaf of a possibly
+    reduced shape (scales / factored moments)."""
+    entries = list(spec) + [None] * (len(pshape) - len(spec))
+    if sshape == pshape:
+        out = entries
+    elif sshape == tuple(pshape[:-1]) + (1,):  # int8 per-row scales
+        out = entries[:-1] + [None]
+    elif sshape == tuple(pshape[:-1]):  # adafactor row stats
+        out = entries[:-1]
+    elif len(pshape) >= 2 and sshape == tuple(pshape[:-2]) + (pshape[-1],):
+        out = entries[:-2] + [entries[-1]]  # adafactor col stats
+    else:
+        out = [None] * len(sshape)
+    return P(*out)
+
+
+def opt_state_shardings(opt_state_shapes, params_shapes, ctx: ParallelCtx):
+    """Shardings for the optimizer state, derived from the param specs."""
+    pspecs = param_specs(params_shapes, ctx)
+    flat_p = jax.tree.leaves(params_shapes)
+    flat_s = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    specs = {}
+    for key, subtree in opt_state_shapes.items():
+        # each of m/v mirrors params exactly (possibly with {"q","s"} or
+        # {"r","c"} leaf expansion) -> per-param positional match is safe
+        sub_leaves, sub_def = jax.tree.flatten(
+            subtree, is_leaf=lambda x: isinstance(x, dict) and (
+                set(x) <= {"q", "s"} or set(x) <= {"r", "c"}))
+        out = []
+        for p, pspec, sl in zip(flat_p, flat_s, sub_leaves):
+            if isinstance(sl, dict):
+                out.append({k: _adapt_spec(pspec, p.shape, v.shape)
+                            for k, v in sl.items()})
+            else:
+                out.append(_adapt_spec(pspec, p.shape, sl.shape))
+        specs[key] = sub_def.unflatten(out)
+
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def sharded_args_train(model: Model, opt: Optimizer, batch_sds,
+                       ctx: ParallelCtx):
+    """(params, opt_state, batch, step) ShapeDtypeStructs with shardings."""
+    pshapes = model.param_shapes()
+    pspecs = param_specs(pshapes, ctx)
+    params = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(ctx.mesh, sp)),
+        pshapes, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    ostate_shapes = jax.eval_shape(opt.init, pshapes)
+    oshardings = opt_state_shardings(ostate_shapes, pshapes, ctx)
+    opt_state = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        ostate_shapes, oshardings)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(ctx.mesh, P()))
+    return params, opt_state, batch_sds, step
+
+
+def sharded_params(model: Model, ctx: ParallelCtx):
+    pshapes = model.param_shapes()
+    pspecs = param_specs(pshapes, ctx)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(ctx.mesh, sp)),
+        pshapes, pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

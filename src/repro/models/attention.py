@@ -1,0 +1,357 @@
+"""Attention: chunked (flash-style) prefill/train attention, decode attention,
+GQA / MLA / cross-attention projections, and attention-concentration capture
+for RSQ's AttnCon importance.
+
+The chunked attention never materializes the (T, T) score matrix: it scans
+over KV chunks with a running (max, denominator, accumulator) triple — the
+TPU-native analogue of FlashAttention.  The scan body is checkpointed so the
+backward pass recomputes per-chunk scores instead of storing them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, T, KV, Dh) -> (B, T, KV*n_rep, Dh)."""
+    if n_rep == 1:
+        return x
+    b, t, kv, dh = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, t, kv, n_rep, dh))
+    return x.reshape(b, t, kv * n_rep, dh)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 512,
+    q_offset: int = 0,
+    colsum: bool = False,
+):
+    """Chunked attention.
+
+    q: (B, Tq, H, Dh); k: (B, Tk, KV, Dh); v: (B, Tk, KV, Dv), H % KV == 0.
+    Returns (B, Tq, H, Dv) and, when ``colsum`` is set, the per-token
+    attention-concentration scores sum_{h,i} A[h, i, j] of shape (B, Tk)
+    (the AttnCon importance of the paper, computed streamingly).
+    """
+    b, tq, h, dh = q.shape
+    _, tk, kv_heads, _ = k.shape
+    dv = v.shape[-1]
+    n_rep = h // kv_heads
+    kv_chunk = min(kv_chunk, tk)
+    valid_tk = tk
+    pad = (-tk) % kv_chunk
+    if pad:  # ragged KV length (media/cross): pad + mask
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tk = tk + pad
+    n_chunks = tk // kv_chunk
+
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    q_pos = q_offset + jnp.arange(tq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, off = xs
+        k_r = _repeat_kv(k_c, n_rep).astype(jnp.float32)
+        v_r = _repeat_kv(v_c, n_rep).astype(jnp.float32)
+        s = jnp.einsum("bthd,bchd->bthc", qf, k_r)  # (B, Tq, H, c)
+        kv_pos = off + jnp.arange(kv_chunk)
+        if causal:
+            mask = (q_pos[:, None] >= kv_pos[None, :]) & (
+                kv_pos < valid_tk)[None, :]  # (Tq, c)
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        elif pad:
+            s = jnp.where((kv_pos < valid_tk)[None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bthc,bchd->bthd", p, v_r)
+        # Column sums of the *normalized* probabilities require the final
+        # (m, l); accumulate unnormalized stats + the per-chunk max instead.
+        return (m_new, l_new, acc_new), (m_new, p if colsum else None)
+
+    m0 = jnp.full((b, tq, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, tq, h), jnp.float32)
+    a0 = jnp.zeros((b, tq, h, dv), jnp.float32)
+    ks = k.reshape(b, n_chunks, kv_chunk, kv_heads, dh).swapaxes(0, 1)
+    vs = v.reshape(b, n_chunks, kv_chunk, kv_heads, dv).swapaxes(0, 1)
+    offs = jnp.arange(n_chunks) * kv_chunk
+
+    if not colsum:
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(lambda c, x: body(c, x)), (m0, l0, a0), (ks, vs, offs)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    # Capture path (calibration only; tiny models) — keeps per-chunk p.
+    (m, l, acc), (ms, ps) = jax.lax.scan(body, (m0, l0, a0), (ks, vs, offs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # renormalize each chunk's p by exp(m_chunk - m_final)/l_final and
+    # column-sum over (query, head): ps: (nc, B, Tq, H, c)
+    scale = jnp.exp(ms - m[None]) / jnp.maximum(l[None], 1e-30)  # (nc,B,Tq,H)
+    col = jnp.einsum("nbthc,nbth->nbc", ps, scale)  # (nc, B, c)
+    col = col.swapaxes(0, 1).reshape(b, tk)[:, :valid_tk]
+    return out.astype(q.dtype), col
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+) -> jax.Array:
+    """Single-token attention against a (B, S, KV, Dh) cache; positions > pos
+    are masked.  q: (B, 1, H, Dh) -> (B, 1, H, Dv).
+
+    GQA-aware: the query is reshaped to (KV, G) groups and contracted
+    against the cache directly — materializing a head-repeated (B, S, H, Dh)
+    cache view (16x the cache for KV=8 -> H=128!) is exactly what makes
+    long-context decode memory/collective-bound, and it breaks sequence
+    sharding of the cache under SPMD."""
+    import os
+    b, _, h, dh = q.shape
+    _, s, kv_heads, _ = k_cache.shape
+    if os.environ.get("REPRO_BASELINE"):  # pre-optimization path (§Perf)
+        k_r = _repeat_kv(k_cache, h // kv_heads)
+        v_r = _repeat_kv(v_cache, h // kv_heads)
+        qf = q.astype(jnp.float32) * (dh ** -0.5)
+        scores = jnp.einsum("bthd,bshd->bths", qf, k_r.astype(jnp.float32))
+        valid = jnp.arange(s)[None, None, None, :] <= pos
+        scores = jnp.where(valid, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bths,bshd->bthd", p, v_r.astype(jnp.float32))
+        return out.astype(q.dtype)
+    g = h // kv_heads
+    qf = (q.astype(jnp.float32) * (dh ** -0.5)).reshape(b, kv_heads, g, dh)
+    # bf16 operands + fp32 accumulation (MXU-native): casting the cache to
+    # f32 would write a 2x-sized copy of the entire KV cache per layer per
+    # token — 3x the fundamental decode HBM traffic
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf.astype(k_cache.dtype), k_cache,
+                        preferred_element_type=jnp.float32)
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    # streaming-stable softmax over the (possibly sequence-sharded) S axis
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(denom, 1e-30)
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ----------------------------------------------------------- int8 KV cache
+
+
+def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, T, KV, Dh) -> int8 codes + per-(token, head) scales.
+
+    Halves (vs bf16) the fundamental long-context decode HBM traffic — the
+    whole cache is read per generated token (KVQuant/KIVI-style, symmetric
+    per-token-per-head)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.bfloat16)
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+            ).astype(dtype)
+
+
+# ------------------------------------------------------------------ GQA block
+
+
+def init_gqa(key, cfg, dtype):
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(keys[0], d, h * dh, dtype),
+        "wk": dense_init(keys[1], d, kvh * dh, dtype),
+        "wv": dense_init(keys[2], d, kvh * dh, dtype),
+        "wo": dense_init(keys[3], h * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kvh * dh,), dtype)
+        p["bv"] = jnp.zeros((kvh * dh,), dtype)
+    return p
+
+
+def gqa_qkv(p, cfg, x, positions, *, rope: bool = True):
+    b, t, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
+    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
+    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    q = q.reshape(b, t, h, dh)
+    k = k.reshape(b, t, kvh, dh)
+    v = v.reshape(b, t, kvh, dh)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_gqa(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
+    b, t, _ = x.shape
+    q, k, v = gqa_qkv(p, cfg, x, positions)
+    res = flash_attention(q, k, v, causal=causal, kv_chunk=min(kv_chunk, t),
+                          colsum=colsum)
+    if colsum:
+        out, col = res
+    else:
+        out, col = res, None
+    y = out.reshape(b, t, -1) @ p["wo"]
+    return (y, col) if colsum else y
+
+
+# ------------------------------------------------------------------ MLA block
+
+
+def init_mla(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    keys = jax.random.split(key, 6)
+    p = {}
+    if qr:
+        p["wq_a"] = dense_init(keys[0], d, qr, dtype)
+        p["q_norm"] = jnp.ones((qr,), dtype)
+        p["wq_b"] = dense_init(keys[1], qr, h * (dn + dr), dtype)
+    else:
+        p["wq"] = dense_init(keys[1], d, h * (dn + dr), dtype)
+    p["wkv_a"] = dense_init(keys[2], d, kvr + dr, dtype)
+    p["kv_norm"] = jnp.ones((kvr,), dtype)
+    p["wkv_b"] = dense_init(keys[3], kvr, h * (dn + dv), dtype)
+    p["wo"] = dense_init(keys[4], h * dv, d, dtype)
+    return p
+
+
+def mla_qkv(p, cfg, x, positions):
+    """Returns expanded per-head q, k, v plus the latent cache entries."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    if "wq_a" in p:
+        ql = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+        q = (ql @ p["wq_b"]).reshape(b, t, h, dn + dr)
+    else:
+        q = (x @ p["wq"]).reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv = x @ p["wkv_a"]  # (B, T, kvr + dr)
+    c_kv = rms_norm(kv[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, kvr:], positions, cfg.rope_theta)  # 1 head
+    kvb = (c_kv @ p["wkv_b"]).reshape(b, t, h, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], axis=-1
+    )
+    return q, k, v, c_kv, k_rope[..., 0, :]
+
+
+def apply_mla(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
+    b, t, _ = x.shape
+    q, k, v, _, _ = mla_qkv(p, cfg, x, positions)
+    res = flash_attention(q, k, v, causal=causal, kv_chunk=min(kv_chunk, t),
+                          colsum=colsum)
+    if colsum:
+        out, col = res
+    else:
+        out, col = res, None
+    y = out.reshape(b, t, -1) @ p["wo"]
+    return (y, col) if colsum else y
+
+
+def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
+    """Latent-space ("absorbed") MLA decode: the KV cache stores only the
+    compressed c_kv (kvr) + shared rope key (dr) per token.
+
+    x: (B, 1, D); c_cache: (B, S, kvr); rope_cache: (B, S, dr)."""
+    b, _, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    if "wq_a" in p:
+        ql = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+        q = (ql @ p["wq_b"]).reshape(b, 1, h, dn + dr)
+    else:
+        q = (x @ p["wq"]).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
+    wkv_b = p["wkv_b"].reshape(kvr, h, dn + dv)
+    w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb W_k into q: (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
+    q_lat = jnp.einsum("bthd,khd->bthk", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))
+    scale = (dn + dr) ** -0.5
+    s_lat = jnp.einsum("bthk,bsk->bths", q_lat, c_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bthd,bsd->bths", q_rope.astype(jnp.float32),
+                        rope_cache.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    s = c_cache.shape[1]
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    prob = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bths,bsk->bthk", prob, c_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bthk,khd->bthd", ctx_lat, w_v.astype(jnp.float32))
+    y = ctx.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return y
+
+
+# ------------------------------------------------------------- cross-attention
+
+
+def init_cross_attn(key, cfg, dtype):
+    """Cross-attention (VLM media layers / enc-dec): queries from the decoder
+    stream, keys/values from (stub) media or encoder output at d_model."""
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(keys[0], d, h * dh, dtype),
+        "wk": dense_init(keys[1], d, kvh * dh, dtype),
+        "wv": dense_init(keys[2], d, kvh * dh, dtype),
+        "wo": dense_init(keys[3], h * dh, d, dtype),
+    }
+
+
+def cross_kv(p, cfg, media):
+    b, tm, _ = media.shape
+    kvh, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (media @ p["wk"]).reshape(b, tm, kvh, dh)
+    v = (media @ p["wv"]).reshape(b, tm, kvh, dh)
+    return k, v
+
+
+def apply_cross_attn(p, cfg, x, media=None, kv=None, kv_chunk=512):
+    """media: (B, Tm, D) stub embeddings; or precomputed kv (decode path)."""
+    b, t, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    if kv is None:
+        kv = cross_kv(p, cfg, media)
+    k, v = kv
+    out = flash_attention(q, k, v, causal=False,
+                          kv_chunk=min(kv_chunk, k.shape[1]))
+    return out.reshape(b, t, -1) @ p["wo"]

@@ -1,0 +1,155 @@
+"""Shared primitives: RMSNorm, RoPE, SwiGLU FFN, inits.
+
+Conventions: weights are ``(in, out)``; forward is ``y = x @ W (+ b)``.
+Norm/softmax math runs in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    inv_freq = rope_frequencies(dh, theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., T, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., : dh // 2], xf[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- FFN
+
+
+def init_dense_ffn(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),  # gate
+        "wu": dense_init(k2, d_model, d_ff, dtype),  # up
+        "wd": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_dense_ffn(p, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ p["wi"])
+    return (gate * (x @ p["wu"])) @ p["wd"]
+
+
+def capture_dense_ffn(p, x: jax.Array):
+    """Forward returning per-weight inputs for RSQ Hessian accumulation."""
+    h = jax.nn.silu(x @ p["wi"]) * (x @ p["wu"])
+    y = h @ p["wd"]
+    return y, {"wi": x, "wu": x, "wd": h}
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02).astype(dtype)
+
+
+@jax.custom_vjp
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Gather forward; matmul backward.
+
+    The natural backward of a gather is a scatter-add into (V, D), which
+    GSPMD replicates (a multi-GB fp32 buffer per device at 256k vocab).  The
+    custom backward instead accumulates one-hot x grad chunk matmuls under a
+    checkpointed scan — plain dots that partition cleanly over the vocab
+    axis."""
+    return table[tokens]
+
+
+def _embed_fwd(table, tokens):
+    # keeping `table` in the residuals is free: it is a parameter that is
+    # live anyway, and it carries the (V, D)/dtype statics the bwd needs
+    return table[tokens], (tokens, table)
+
+
+def _embed_bwd(res, g):
+    tokens, table = res
+    (v, d), dtype = table.shape, table.dtype
+    b, t = tokens.shape
+    chunk = min(512, t)
+    pad = (-t) % chunk
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+    n = tokens.shape[1] // chunk
+    toks = tokens.reshape(b, n, chunk).swapaxes(0, 1)
+    gs = g.reshape(b, n, chunk, d).swapaxes(0, 1)
+
+    def body(acc, xs):
+        tok_c, g_c = xs
+        oh = jax.nn.one_hot(tok_c, v, dtype=g.dtype)  # (b, c, V)
+        return acc + jnp.einsum("bcv,bcd->vd", oh, g_c), None
+
+    acc0 = jnp.zeros((v, d), g.dtype)
+    d_table, _ = jax.lax.scan(jax.checkpoint(body), acc0, (toks, gs))
+    return d_table.astype(dtype), None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def cross_entropy_chunked(
+    x: jax.Array,
+    head_w: jax.Array,
+    labels: jax.Array,
+    mask: jax.Array | None = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean token cross-entropy without materializing (B, T, V) logits.
+
+    x: (B, T, D) final hidden states; head_w: (D, V); labels: (B, T).
+    Scans over T chunks; each chunk's logits are formed, reduced and freed —
+    with the body checkpointed, the backward recomputes them chunk by chunk.
+    """
+    b, t, d = x.shape
+    chunk = min(chunk, t)
+    n = t // chunk
+    rem = t - n * chunk
+    if mask is None:
+        mask = jnp.ones((b, t), dtype=jnp.float32)
+
+    def chunk_loss(x_c, y_c, m_c):
+        logits = (x_c @ head_w).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * m_c), jnp.sum(m_c)
+
+    def body(carry, args):
+        tot, cnt = carry
+        l, c = chunk_loss(*args)
+        return (tot + l, cnt + c), None
+
+    xs = (
+        x[:, : n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1),
+        labels[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1),
+        mask[:, : n * chunk].reshape(b, n, chunk).swapaxes(0, 1),
+    )
+    (total, count), _ = jax.lax.scan(jax.checkpoint(body), (0.0, 0.0), xs)
+    if rem:
+        l, c = chunk_loss(x[:, n * chunk :], labels[:, n * chunk :], mask[:, n * chunk :])
+        total, count = total + l, count + c
+    return total / jnp.maximum(count, 1.0)

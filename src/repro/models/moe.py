@@ -1,0 +1,182 @@
+"""Top-k MoE with shared + routed experts (DeepSeek/Jamba style).
+
+Expert parallelism (EP) maps experts onto the ``model`` mesh axis.  Inside a
+``shard_map`` block, activations arrive token-sharded over the data axes and
+*replicated* over ``model``; every device (a) runs the (tiny) router
+redundantly, (b) gathers the tokens routed to its local experts into a
+fixed-``capacity`` buffer (static shapes — sort + scatter), (c) runs the
+expert FFNs as batched einsums, and (d) scatter-adds its partial output,
+combined with one ``psum`` over ``model``.  Communication is therefore one
+(T_local, d) reduction — the same cost as a row-parallel matmul — instead of
+an all-to-all; overflow beyond capacity is dropped (GShard semantics).
+
+The same gather/compute/scatter core also runs unsharded (``axis=None``) for
+single-device smoke tests and for RSQ calibration capture.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_dense_ffn, apply_dense_ffn
+
+
+def init_moe(key, cfg, dtype):
+    e, d, f = cfg.n_routed_experts, cfg.d_model, cfg.moe_d_ff
+    keys = jax.random.split(key, 5)
+
+    def experts_init(k, din, dout):
+        ks = jax.random.split(k, e)
+        return jnp.stack([dense_init(kk, din, dout, dtype) for kk in ks])
+
+    p = {
+        "router": dense_init(keys[0], d, e, jnp.float32),
+        "experts": {
+            "wi": experts_init(keys[1], d, f),
+            "wu": experts_init(keys[2], d, f),
+            "wd": experts_init(keys[3], f, d),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_dense_ffn(keys[4], d, cfg.n_shared_experts * f, dtype)
+    return p
+
+
+def route(router_w, x2d, top_k: int):
+    """Returns (top_idx (T,k), top_w (T,k), gates (T,E))."""
+    logits = (x2d.astype(jnp.float32) @ router_w)  # router kept fp32
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(gates, top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_idx, top_w, gates
+
+
+def load_balance_loss(gates, top_idx, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    t, k = top_idx.shape
+    dispatch = jax.nn.one_hot(top_idx, n_experts, dtype=jnp.float32).sum(1)
+    f = dispatch.mean(0)  # fraction of tokens hitting e
+    p = gates.mean(0)
+    return n_experts * jnp.sum(f * p)
+
+
+def _expert_buffers(x2d, top_idx, top_w, e_start, e_local, capacity):
+    """Gather routed tokens into (e_local, capacity, d) with drop-overflow.
+
+    Slot-major formulation: scatter *token indices* (cheap int ops) into the
+    (e_local * capacity) slot table, then gather feature rows directly into
+    the buffer.  Nothing of size (T * top_k, d) is ever materialized — the
+    naive gather/scatter forms a 15 GB intermediate per layer at DeepSeek-V3
+    scale.
+
+    Returns (buf, slot_token, slot_w) where slot_token (e_local*capacity,)
+    maps each slot to its source token (== T for empty slots) and slot_w are
+    the routing weights per slot (0 for empty)."""
+    t, k = top_idx.shape
+    d = x2d.shape[-1]
+    flat_e = top_idx.reshape(-1)  # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    # rank of each assignment within its expert (stable order over tokens):
+    # sort by expert id; rank = position - first index of that expert id
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    rank_sorted = jnp.arange(flat_e.shape[0]) - jnp.searchsorted(sorted_e, sorted_e)
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    local = (flat_e >= e_start) & (flat_e < e_start + e_local)
+    keep = local & (rank < capacity)
+    n_slots = e_local * capacity
+    dest = jnp.where(keep, (flat_e - e_start) * capacity + rank, n_slots)
+    slot_token = jnp.full((n_slots,), t, jnp.int32).at[dest].set(
+        flat_t.astype(jnp.int32), mode="drop")
+    slot_w = jnp.zeros((n_slots,), flat_w.dtype).at[dest].set(
+        flat_w, mode="drop")
+    # gather rows per slot; empty slots (token == T) read zeros
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, d), x2d.dtype)], axis=0)
+    buf = x_pad[slot_token].reshape(e_local, capacity, d)
+    return buf, slot_token, slot_w
+
+
+def _expert_ffn(experts, buf):
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, experts["wi"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, experts["wu"])
+    return jnp.einsum("ecf,efd->ecd", gate * up, experts["wd"])
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    cap = n_tokens * cfg.moe_top_k / cfg.n_routed_experts * cfg.capacity_factor
+    return max(8, int(math.ceil(cap / 8) * 8))
+
+
+def apply_moe(p, cfg, x, *, axis: str | None = None):
+    """x: (B, T, D) -> (y, aux_loss).  ``axis``: EP mesh axis (inside
+    shard_map) or None for the local full-expert path."""
+    b, t, d = x.shape
+    x2d = x.reshape(b * t, d)
+    e = cfg.n_routed_experts
+    top_idx, top_w, gates = route(p["router"], x2d, cfg.moe_top_k)
+    aux = load_balance_loss(gates, top_idx, e)
+    capacity = moe_capacity(cfg, b * t)
+
+    if axis is None:
+        e_start, e_local = 0, e
+        experts = p["experts"]
+    else:
+        n_shards = jax.lax.axis_size(axis)
+        e_local = e // n_shards
+        e_start = jax.lax.axis_index(axis) * e_local
+        experts = p["experts"]  # shard_map already hands us the local slice
+
+    buf, slot_token, slot_w = _expert_buffers(
+        x2d, top_idx, top_w, e_start, e_local, capacity)
+    h = _expert_ffn(experts, buf).reshape(e_local * capacity, d)
+    # scatter-add slot outputs back to their tokens (empty slots drop)
+    y = jnp.zeros((b * t, d), x.dtype).at[slot_token].add(
+        h * slot_w[:, None].astype(h.dtype), mode="drop")
+    if axis is not None:
+        y = jax.lax.psum(y, axis)
+    if "shared" in p:
+        y = y + apply_dense_ffn(p["shared"], x2d)
+    return y.reshape(b, t, d), aux
+
+
+def capture_moe(p, cfg, x):
+    """Local forward returning per-weight calibration inputs for RSQ.
+
+    Returns (y, captures) where captures maps weight path -> (tokens, d_in)
+    input matrix: router and shared FFN see all tokens; each expert's
+    wi/wu/wd see only its routed capacity buffer."""
+    b, t, d = x.shape
+    x2d = x.reshape(b * t, d)
+    e = cfg.n_routed_experts
+    top_idx, top_w, gates = route(p["router"], x2d, cfg.moe_top_k)
+    capacity = moe_capacity(cfg, b * t)
+    buf, slot_token, slot_w = _expert_buffers(
+        x2d, top_idx, top_w, 0, e, capacity)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["experts"]["wi"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["wu"])
+    hidden = gate * up
+    out = jnp.einsum("ecf,efd->ecd", hidden, p["experts"]["wd"])
+    h = out.reshape(e * capacity, d)
+    y = jnp.zeros((b * t, d), x.dtype).at[slot_token].add(
+        h * slot_w[:, None].astype(h.dtype), mode="drop")
+    caps = {
+        "experts/wi": buf,     # (E, C, d)
+        "experts/wu": buf,
+        "experts/wd": hidden,  # (E, C, f)
+        "__slot_token": slot_token,  # (E*C,) slot -> source token (T = empty)
+    }
+    if "shared" in p:
+        sh, sh_caps = _capture_shared(p["shared"], x2d)
+        y = y + sh.reshape(b * t, d)
+        caps.update({f"shared/{k}": v for k, v in sh_caps.items()})
+    aux = load_balance_loss(gates, top_idx, e)
+    return y.reshape(b, t, d), aux, caps
+
+
+def _capture_shared(p, x2d):
+    h = jax.nn.silu(x2d @ p["wi"]) * (x2d @ p["wu"])
+    return h @ p["wd"], {"wi": x2d, "wu": x2d, "wd": h}

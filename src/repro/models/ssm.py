@@ -1,0 +1,182 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked matmul formulation.
+
+TPU adaptation: the intra-chunk quadratic term and inter-chunk state
+recurrence are expressed as dense einsums (MXU-friendly) inside a
+``lax.scan`` over chunks — the (chunk × chunk) decay matrix only ever exists
+for one chunk at a time, so memory is O(T · d) like the Triton kernel,
+without the Triton kernel.
+
+Projections are split so that tensor-parallel sharding is natural:
+``wzx`` (z and x branches, column-parallel), ``wdt`` (per-head dt,
+column-parallel with heads), ``wbc`` (shared B/C, replicated — groups = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads
+    w = cfg.ssm_conv_width
+    keys = jax.random.split(key, 6)
+    return {
+        "wzx": dense_init(keys[0], d, 2 * di, dtype),
+        "wbc": dense_init(keys[1], d, 2 * st, dtype),
+        "wdt": dense_init(keys[2], d, nh, dtype),
+        "conv_x": (jax.random.normal(keys[3], (w, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(keys[4], (w, 2 * st), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * st,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(keys[5], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, T, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    t = x.shape[1]
+    out = b
+    for i in range(width):
+        out = out + xp[:, i : i + t] * w[i]
+    return out
+
+
+def _ssd_scan(x, dt, B, C, A, chunk: int):
+    """Chunked SSD. x: (B, T, nh, hd); dt: (B, T, nh); B/C: (B, T, st).
+
+    Returns y: (B, T, nh, hd) and final state (B, nh, hd, st)."""
+    b, t, nh, hd = x.shape
+    st = B.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0, f"T={t} not divisible by chunk={chunk}"
+    nc = t // chunk
+
+    log_a = dt * A  # (B, T, nh), negative
+    xdt = (x * dt[..., None]).astype(jnp.float32)
+
+    def to_chunks(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(xdt), to_chunks(log_a),
+          to_chunks(B.astype(jnp.float32)), to_chunks(C.astype(jnp.float32)))
+
+    def body(h, args):
+        x_c, la_c, b_c, c_c = args  # (B, cl, ...)
+        cs = jnp.cumsum(la_c, axis=1)  # (B, cl, nh)
+        # intra-chunk decay matrix L[l, s] = exp(cs_l - cs_s), l >= s
+        diff = cs[:, :, None, :] - cs[:, None, :, :]  # (B, l, s, nh)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bln,bsn->bls", c_c, b_c)  # shared across heads
+        y_diag = jnp.einsum("bls,blsh,bshp->blhp", scores, L, x_c)
+        # contribution of the carried state
+        decay_out = jnp.exp(cs)  # (B, cl, nh)
+        y_off = jnp.einsum("bln,bhpn->blhp", c_c, h) * decay_out[..., None]
+        # new carried state
+        chunk_end = cs[:, -1, :]  # (B, nh)
+        decay_in = jnp.exp(chunk_end[:, None, :] - cs)  # (B, cl, nh)
+        s_c = jnp.einsum("bln,blh,blhp->bhpn", b_c, decay_in, x_c)
+        h_new = jnp.exp(chunk_end)[..., None, None] * h + s_c
+        return h_new, y_diag + y_off
+
+    h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, t, nh, hd)
+    return y, h_final
+
+
+def apply_mamba(p, cfg, x, *, return_state: bool = False):
+    """x: (B, T, D) -> (B, T, D). Optionally returns (conv_state, ssm_state)."""
+    b, t, _ = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    zx = x @ p["wzx"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["wbc"]
+    dt_raw = (x @ p["wdt"]).astype(jnp.float32)
+
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, conv_w, p["conv_b"]))
+    xc, Bc, Cc = xbc[..., :di], xbc[..., di : di + st], xbc[..., di + st :]
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B, T, nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    xh = xc.reshape(b, t, nh, hd)
+    y, h_final = _ssd_scan(xh, dt, Bc, Cc, A, cfg.ssm_chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        w = cfg.ssm_conv_width
+        pre_act = jnp.concatenate([xin, bc], axis=-1)
+        conv_state = pre_act[:, t - (w - 1):, :] if t >= w - 1 else jnp.pad(
+            pre_act, ((0, 0), (w - 1 - t, 0), (0, 0)))
+        return out, (conv_state, h_final)
+    return out
+
+
+def capture_mamba(p, cfg, x):
+    """Forward returning the per-weight calibration inputs RSQ needs:
+    wzx/wbc/wdt see the (normed) stream; out_proj sees the gated output."""
+    b, t, _ = x.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    zx = x @ p["wzx"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["wbc"]
+    dt_raw = (x @ p["wdt"]).astype(jnp.float32)
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, conv_w, p["conv_b"]))
+    xc, Bc, Cc = xbc[..., :di], xbc[..., di : di + st], xbc[..., di + st :]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xc.reshape(b, t, nh, hd)
+    y, _ = _ssd_scan(xh, dt, Bc, Cc, A, cfg.ssm_chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    caps = {"wzx": x, "wbc": x, "wdt": x, "out_proj": y}
+    return out, caps
+
+
+def mamba_decode(p, cfg, x, conv_state, ssm_state):
+    """Single-token step. x: (B, 1, D); conv_state: (B, W-1, di+2st);
+    ssm_state: (B, nh, hd, st)."""
+    b = x.shape[0]
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    zx = x @ p["wzx"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = x @ p["wbc"]
+    dt_raw = (x @ p["wdt"]).astype(jnp.float32)[:, 0]  # (B, nh)
+
+    xbc_t = jnp.concatenate([xin, bc], axis=-1)[:, 0]  # (B, di+2st)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)  # (W, C)
+    window = jnp.concatenate([conv_state, xbc_t[:, None]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, conv_w) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bc, Cc = (conv_out[:, :di], conv_out[:, di : di + st],
+                  conv_out[:, di + st :])
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # (B, nh)
+    xh = xc.reshape(b, nh, hd).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], Bc.astype(jnp.float32))
+    h_new = a[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cc.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_conv_state = window[:, 1:]
+    return out, (new_conv_state, h_new)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, make_optimizer  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,39 @@
+"""Gradient compression with error feedback.
+
+``ef_compress`` quantize-dequantizes gradients to int8 (per-row scales) and
+carries the residual to the next step (error feedback, Seide et al. /
+1-bit-SGD lineage) — converges like fp32 while the wire format is 4x
+smaller.  The matching on-wire collective is
+runtime/collectives.ring_allreduce_int8; under pure pjit the compression is
+applied before the (GSPMD-inserted) reduction over the pod axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8_roundtrip(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / s), -127, 127)
+    return q * s
+
+
+def ef_compress(grads, err_state):
+    """Returns (compressed_grads, new_err_state)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        c = _q8_roundtrip(gf)
+        return c.astype(g.dtype), gf - c
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

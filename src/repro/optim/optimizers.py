@@ -1,0 +1,218 @@
+"""Optimizers from scratch: AdamW, 8-bit AdamW (int8 moments + per-row
+scales — the memory trick that lets 100B+ models train in one pod), and
+Adafactor (factored second moment, optional momentum-free mode — the only
+optimizer whose state fits a 671B model on 256 x 16 GB chips), plus SGD.
+
+All are pure pytree transforms: ``state = opt.init(params)``;
+``new_params, new_state = opt.update(params, grads, state, step)``.
+Master weights are kept in the param dtype (bf16 training uses bf16 params +
+fp32 update math, matching the dry-run memory budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+# ------------------------------------------------------------------ int8 pack
+
+def _q8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize fp tensor to int8 with per-row (last-axis) scales."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# --------------------------------------------------------------------- AdamW
+
+
+def make_adamw(lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+               bits8: bool = False) -> Optimizer:
+    def init(params):
+        def zero(p):
+            if bits8:
+                q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+                return {"q": q, "s": s}
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return {
+            "m": jax.tree.map(zero, params),
+            "v": jax.tree.map(zero, params),
+        }
+
+    def update(params, grads, state, step):
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            mf = _dq8(m["q"], m["s"]) if bits8 else m
+            vf = _dq8(v["q"], v["s"]) if bits8 else v
+            mf = b1 * mf + (1 - b1) * gf
+            vf = b2 * vf + (1 - b2) * gf * gf
+            upd = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+            if bits8:
+                mq, ms = _q8(mf)
+                vq, vs = _q8(vf)
+                return new_p, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+            return new_p, mf, vf
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer("adamw8bit" if bits8 else "adamw", init, update)
+
+
+# ------------------------------------------------------------------ Adafactor
+
+
+def make_adafactor(lr, *, b1=0.0, eps=1e-30, weight_decay=0.0,
+                   clip_threshold=1.0) -> Optimizer:
+    """Factored second moment over the last two axes; momentum optional
+    (b1=0 stores no first moment at all)."""
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def zero_v(p):
+            if factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return jnp.zeros(p.shape, jnp.float32)
+
+        state = {"v": jax.tree.map(zero_v, params)}
+        if b1:
+            state["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    def update(params, grads, state, step):
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8  # Adafactor's schedule
+
+        def upd(p, g, v, m):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if factored(p):
+                r = beta2 * v["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                c = beta2 * v["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(r, axis=-1, keepdims=True)
+                new_v = {"r": r, "c": c}
+                # u = g / sqrt(vhat) computed as elementwise products of g
+                # with broadcast row/col factors — never materializing the
+                # (unsharded!) r (x) c outer product
+                u = (gf
+                     * jax.lax.rsqrt(jnp.maximum(r, eps))[..., None]
+                     * jax.lax.rsqrt(jnp.maximum(c, eps))[..., None, :]
+                     * jnp.sqrt(jnp.maximum(denom, eps))[..., None])
+            else:
+                vhat = beta2 * v + (1 - beta2) * g2
+                new_v = vhat
+                u = gf * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if b1:
+                m = b1 * m + (1 - b1) * u
+                u = m
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_v, m
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_m = (tdef.flatten_up_to(state["m"]) if b1
+                  else [None] * len(flat_p))
+        out = [upd(p, g, v, m) for p, g, v, m in
+               zip(flat_p, flat_g, flat_v, flat_m)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_state = {"v": tdef.unflatten([o[1] for o in out])}
+        if b1:
+            new_state["m"] = tdef.unflatten([o[2] for o in out])
+        return new_p, new_state
+
+    return Optimizer("adafactor", init, update)
+
+
+# ----------------------------------------------------------------------- SGD
+
+
+def make_sgd(lr, *, momentum=0.9, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        if not momentum:
+            return {}
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(params, grads, state, step):
+        lr_t = _lr_at(lr, step)
+
+        def upd(p, g, m):
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                m = momentum * m + gf
+                gf = m
+            return (p.astype(jnp.float32) - lr_t * gf).astype(p.dtype), m
+
+        if momentum:
+            flat_p, tdef = jax.tree.flatten(params)
+            flat_g = tdef.flatten_up_to(grads)
+            flat_m = tdef.flatten_up_to(state["m"])
+            out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+            return (tdef.unflatten([o[0] for o in out]),
+                    {"m": tdef.unflatten([o[1] for o in out])})
+        new_p = jax.tree.map(lambda p, g: upd(p, g, None)[0], params, grads)
+        return new_p, {}
+
+    return Optimizer("sgd", init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(lr, **kw)
+    if name == "adamw8bit":
+        return make_adamw(lr, bits8=True, **kw)
+    if name == "adafactor":
+        return make_adafactor(lr, **kw)
+    if name == "sgd":
+        return make_sgd(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,25 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+
+    return f
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+    return f

@@ -1,0 +1,140 @@
+"""Manual-collective building blocks (shard_map level).
+
+``allgather_matmul`` / ``matmul_reducescatter`` implement the
+collective-matmul overlap (ring ppermute interleaved with partial matmuls —
+the TPU analogue of Megatron's overlapped TP, and what the XLA latency
+hiding scheduler pipelines on real hardware).
+
+``ring_allreduce_int8`` is the gradient-compression collective: a ring
+reduce-scatter that re-quantizes each hop to int8 with per-chunk scales,
+followed by an all-gather of the int8 result; combined with the error
+feedback in optim/compression it gives 4x cheaper gradient reduction over
+the slow (DCN / inter-pod) axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(n: int, reverse: bool = False):
+    if reverse:
+        return [(i, (i - 1) % n) for i in range(n)]
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def varying(x, axis_name):
+    """Mark a device-invariant value as device-varying along ``axis_name``
+    (needed for loop carries that become varying inside ring loops)."""
+    try:
+        return lax.pcast(x, (axis_name,), to="varying")
+    except (AttributeError, TypeError, ValueError):
+        return x  # already varying, or vma checking unavailable
+
+
+def allgather_matmul(x: jax.Array, w: jax.Array, axis_name: str) -> jax.Array:
+    """y = all_gather(x, axis) @ w, overlapped.
+
+    x: (t_loc, d) — the local sequence shard; w: (d, f_loc) — the local
+    column shard.  Returns (t_loc * n, f_loc).  Each ring step multiplies
+    the currently-held shard while the next one is in flight."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    t_loc = x.shape[0]
+    out = varying(jnp.zeros((t_loc * n, w.shape[1]), x.dtype), axis_name)
+
+    def body(i, carry):
+        x_cur, out = carry
+        src = (idx - i) % n  # owner of the shard we currently hold
+        part = x_cur @ w
+        out = lax.dynamic_update_slice_in_dim(out, part, src * t_loc, 0)
+        x_nxt = lax.ppermute(x_cur, axis_name, _ring_perm(n))
+        return x_nxt, out
+
+    _, out = lax.fori_loop(0, n, body, (x, out))
+    return out
+
+
+def matmul_reducescatter(x: jax.Array, w: jax.Array,
+                         axis_name: str) -> jax.Array:
+    """y = reduce_scatter(x @ w, axis) over the row dim, overlapped.
+
+    x: (t, d_loc); w: (d_loc, f).  Returns the caller's (t/n, f) shard of
+    sum_axis(x @ w): partial products for remote shards are computed first
+    and accumulated around the ring."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    t = x.shape[0]
+    assert t % n == 0
+    t_loc = t // n
+
+    def chunk(i):
+        # row chunk owned by device (idx + i) % n
+        owner = (idx + i) % n
+        return lax.dynamic_slice_in_dim(x, owner * t_loc, t_loc, 0)
+
+    # ring reduce-scatter recurrence: at step s device j works on chunk
+    # (j + 1 + s) mod n; the value received from j+1 covers the same chunk
+    acc = chunk(1) @ w
+
+    def body(s, acc):
+        acc = lax.ppermute(acc, axis_name, _ring_perm(n, reverse=True))
+        return acc + chunk(s + 2) @ w
+
+    acc = lax.fori_loop(0, n - 1, body, acc)
+    return acc
+
+
+def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce with int8 on-the-wire (per-hop requantization).
+
+    x: (n * c, ...) — the leading dim must divide by the axis size.  Each
+    hop moves int8 codes + one fp32 scale per chunk instead of fp32 data."""
+    n = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    assert x.shape[0] % n == 0
+    c = x.shape[0] // n
+    xf = x.astype(jnp.float32)
+
+    def q8(v):
+        amax = jnp.max(jnp.abs(v))
+        s = jnp.maximum(amax, 1e-12) / 127.0
+        return jnp.clip(jnp.round(v / s), -127, 127).astype(jnp.int8), s
+
+    def chunk(i):
+        owner = (idx + i) % n
+        return lax.dynamic_slice_in_dim(xf, owner * c, c, 0)
+
+    # ring reduce-scatter: after n-1 hops, device idx holds the full sum of
+    # chunk idx (quantized on every hop)
+    q, s = q8(chunk(1))
+
+    def rs_body(i, carry):
+        q, s = carry
+        q = lax.ppermute(q, axis_name, _ring_perm(n, reverse=True))
+        s = lax.ppermute(s, axis_name, _ring_perm(n, reverse=True))
+        acc = q.astype(jnp.float32) * s + chunk(i + 2)
+        return q8(acc)
+
+    if n > 1:
+        q, s = lax.fori_loop(0, n - 1, rs_body, (q, s))
+    else:
+        q, s = q8(chunk(0))
+    own = q.astype(jnp.float32) * s  # fully reduced local chunk
+
+    # all-gather the int8-coded chunks back
+    out = varying(jnp.zeros_like(xf), axis_name)
+    qg, sg = q8(own)
+
+    def ag_body(i, carry):
+        qg, sg, out = carry
+        src = (idx - i) % n
+        out = lax.dynamic_update_slice_in_dim(
+            out, qg.astype(jnp.float32) * sg, src * c, 0)
+        qg = lax.ppermute(qg, axis_name, _ring_perm(n))
+        sg = lax.ppermute(sg, axis_name, _ring_perm(n))
+        return qg, sg, out
+
+    _, _, out = lax.fori_loop(0, n, ag_body, (qg, sg, out))
+    return out.astype(x.dtype)

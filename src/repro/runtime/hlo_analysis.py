@@ -1,0 +1,243 @@
+"""Post-SPMD HLO analysis for the roofline report.
+
+``compiled.cost_analysis()`` counts each loop body exactly once, so scanned-layer
+models would be under-counted by ``n_layers``x.  This parser walks the
+scheduled HLO text, extracts ``known_trip_count`` from every ``while`` op's
+backend_config, and multiplies per-instruction costs by the product of
+enclosing loop trip counts.  It reports, per device:
+
+  * ``dot_flops``      — 2 * prod(out) * prod(contracting dims) per dot
+  * ``bytes_accessed`` — resolved operand bytes + output bytes per
+                         top-level instruction (fusion internals excluded —
+                         a fusion's operands/outputs are its HBM traffic)
+  * ``collectives``    — per-op byte totals + estimated link bytes using
+                         ring-algorithm formulas (all-reduce 2S(n-1)/n, ...)
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "call", "iota",
+}
+
+# HBM-traffic proxy: only ops that form fusion boundaries on TPU count for
+# the memory term.  Standalone elementwise ops (converts/adds/selects the
+# CPU backend leaves unfused, incl. its f32-staging of bf16) would be fused
+# into neighbours by the TPU compiler, so counting them overstates bytes.
+_BYTES_OPS = {
+    "dot", "convolution", "fusion", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "cholesky",
+    "triangular-solve", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "copy", "copy-start", "concatenate",
+    "pad", "select-and-scatter", "rng-bit-generator", "custom-call",
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shape(type_str: str):
+    """-> (bytes, [list of (dtype, dims)]) for possibly-tuple type strings."""
+    total = 0.0
+    shapes = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = math.prod(int(d) for d in dims.split(","))
+        total += DTYPE_BYTES[dt] * n
+        shapes.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return total, shapes
+
+
+def parse_module(text: str):
+    """-> dict comp_name -> list of instruction dicts."""
+    comps: dict[str, list[dict]] = {}
+    current = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and (m := _COMP_RE.match(line)):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            continue
+        if current is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, type_str, op, rest = im.groups()
+        # operands: up to the closing paren at depth 0
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands_str = rest[:end]
+        attrs = rest[end + 1:]
+        out_bytes, out_shapes = _parse_shape(type_str)
+        comps[current].append({
+            "name": name, "op": op, "type": type_str,
+            "out_bytes": out_bytes, "out_shapes": out_shapes,
+            "operands": re.findall(r"%([\w\.\-]+)", operands_str),
+            "attrs": attrs, "line": line,
+        })
+    return comps
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = parse_module(text)
+    if not comps:
+        return {"error": "no computations parsed"}
+
+    # entry = last ENTRY computation in text; find via 'ENTRY' marker
+    entry = None
+    for raw in text.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_RE.match(raw)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = next(iter(comps))
+
+    # instruction name -> (out_bytes, out_shapes), global fallback map
+    shape_of: dict[str, tuple] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            shape_of.setdefault(ins["name"], (ins["out_bytes"],
+                                              ins["out_shapes"]))
+
+    # multipliers: entry x1; while bodies/conditions x trip_count (nested ok)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    stack = [entry]
+    seen = set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen:
+            continue
+        seen.add(cname)
+        m = mult[cname]
+        for ins in comps.get(cname, []):
+            if ins["op"] == "while":
+                tm = _TRIP_RE.search(ins["attrs"])
+                trips = float(tm.group(1)) if tm else 1.0
+                for key in ("body", "condition"):
+                    cm = re.search(key + r"=%?([\w\.\-]+)", ins["attrs"])
+                    if cm:
+                        mult[cm.group(1)] += m * trips
+                        stack.append(cm.group(1))
+            elif ins["op"] == "conditional":
+                for cm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                      ins["attrs"]):
+                    names = (cm.group(1) or cm.group(2) or "")
+                    for n in re.findall(r"%?([\w\.\-]+)", names):
+                        mult[n] += m
+                        stack.append(n)
+
+    dot_flops = 0.0
+    bytes_accessed = 0.0
+    coll = defaultdict(lambda: {"count": 0, "bytes": 0.0, "link_bytes": 0.0})
+
+    for cname in mult:
+        m = mult[cname]
+        local = {i["name"]: (i["out_bytes"], i["out_shapes"])
+                 for i in comps.get(cname, [])}
+
+        def resolve(name):
+            return local.get(name) or shape_of.get(name)
+
+        for ins in comps.get(cname, []):
+            op = ins["op"]
+            if op == "dot":
+                lhs = resolve(ins["operands"][0]) if ins["operands"] else None
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  ins["attrs"] + ins["line"])
+                k = 1
+                if lhs and cdims and lhs[1]:
+                    dims = lhs[1][0][1]
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(dims):
+                            k *= dims[int(d)]
+                out_elems = 0
+                for dt, dims in ins["out_shapes"]:
+                    out_elems += math.prod(dims) if dims else 1
+                dot_flops += m * 2.0 * out_elems * k
+            if op in COLLECTIVES:
+                n = 0
+                gm = _GROUPS_RE.search(ins["line"])
+                if gm:
+                    n = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(ins["line"])
+                    if gl:
+                        n = len(gl.group(1).split(","))
+                n = max(n, 2)
+                s = ins["out_bytes"]
+                if op == "all-reduce":
+                    link = 2.0 * s * (n - 1) / n
+                elif op == "all-gather":
+                    link = s * (n - 1) / n
+                elif op == "reduce-scatter":
+                    link = s * (n - 1)  # input = out * n
+                elif op == "all-to-all":
+                    link = s * (n - 1) / n
+                else:  # collective-permute
+                    link = s
+                c = coll[op]
+                c["count"] += m
+                c["bytes"] += m * s
+                c["link_bytes"] += m * link
+            if op in _BYTES_OPS and not ins["type"].startswith("("):
+                b = ins["out_bytes"]
+                for o in ins["operands"]:
+                    r = resolve(o)
+                    if r:
+                        b += r[0]
+                bytes_accessed += m * b
+
+    return {
+        "entry": entry,
+        "dot_flops_per_device": dot_flops,
+        "bytes_accessed_per_device": bytes_accessed,
+        "collectives": {k: dict(v) for k, v in coll.items()},
+        "collective_link_bytes_per_device": sum(
+            v["link_bytes"] for v in coll.values()),
+        "n_computations": len(comps),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(json.dumps(analyze_hlo(open(sys.argv[1]).read()), indent=2))

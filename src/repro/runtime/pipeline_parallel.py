@@ -1,0 +1,64 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+Stages hold disjoint layer slices; microbatches stream through a ring of
+``ppermute`` transfers.  The schedule runs M + S - 1 ticks; stage s is
+active for microbatches t - s in [0, M).  Bubble fraction = (S-1)/(M+S-1).
+
+This is an optional runtime feature (the required production meshes are
+DP x TP); it composes: wrap the per-stage step in shard_map over
+("stage",) and keep DP/TP sharding inside each stage.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pipeline_apply(stage_fn: Callable, params_stage, x_microbatches,
+                   axis_name: str = "stage"):
+    """Run inside shard_map over the stage axis.
+
+    stage_fn(params_stage, x) -> y; params_stage: this device's stage
+    params; x_microbatches: (M, mb, ...) — identical on every stage (only
+    stage 0 consumes them).  Returns (M, mb, ...) outputs of the LAST stage
+    (other stages return zeros)."""
+    s = lax.axis_size(axis_name)
+    idx = lax.axis_index(axis_name)
+    m = x_microbatches.shape[0]
+    mb_shape = x_microbatches.shape[1:]
+    ticks = m + s - 1
+
+    from repro.runtime.collectives import varying
+
+    out = varying(jnp.zeros((m,) + mb_shape, x_microbatches.dtype), axis_name)
+    carry_in = varying(jnp.zeros(mb_shape, x_microbatches.dtype), axis_name)
+
+    def tick(t, state):
+        carry_in, out = state
+        mb_idx = t - idx  # microbatch this stage works on at tick t
+        active = (mb_idx >= 0) & (mb_idx < m)
+        # stage 0 reads fresh microbatches; others use the ring input
+        x_in = jnp.where(
+            idx == 0,
+            x_microbatches[jnp.clip(mb_idx, 0, m - 1)],
+            carry_in)
+        y = stage_fn(params_stage, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        # last stage records its result
+        out = jnp.where(
+            (idx == s - 1) & active,
+            out.at[jnp.clip(mb_idx, 0, m - 1)].set(y),
+            out)
+        # ring transfer to the next stage
+        carry_next = lax.ppermute(
+            y, axis_name, [(i, (i + 1) % s) for i in range(s)])
+        return carry_next, out
+
+    _, out = lax.fori_loop(0, ticks, tick, (carry_in, out))
+    # only the last stage holds real outputs; broadcast them ring-wise
+    out = lax.psum(jnp.where(idx == s - 1, out, jnp.zeros_like(out)),
+                   axis_name)
+    return out

@@ -1,0 +1,200 @@
+"""Logical-axis sharding rules -> NamedSharding, and the ParallelCtx threaded
+through the model zoo.
+
+Rules follow the Megatron/MaxText recipe:
+  * column-parallel (d_in, d_out) weights: (fsdp=data, tensor=model)
+  * row-parallel (d_out, d_in->d_model) weights: (tensor=model, fsdp=data)
+  * experts (E, ...) : E on the model axis (expert parallelism)
+  * vocab-parallel embedding: (model, None); LM head: (None, model)
+  * activations: batch on (pod, data); heads/ff on model via GSPMD
+    propagation with explicit residual-stream constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh | None = None
+    dp: tuple = ()  # data axes, e.g. ("data",) or ("pod", "data")
+    tp: str | None = None  # tensor/expert axis, e.g. "model"
+    ep: bool = False  # route MoE through the shard_map EP path
+    mode: str = "train"  # "train" | "decode" (serving-specific param rules)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def resolve(self, *entries) -> P:
+        """entries: "dp" | "tp" | "2d" | None -> PartitionSpec."""
+        out = []
+        for e in entries:
+            if e == "dp":
+                if not self.dp:
+                    out.append(None)
+                else:
+                    out.append(self.dp if len(self.dp) != 1 else self.dp[0])
+            elif e == "tp":
+                out.append(self.tp)
+            elif e == "2d":  # all mesh axes on one dim (decode weights)
+                axes = ((self.tp,) if self.tp else ()) + tuple(self.dp)
+                out.append(axes if axes else None)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def axis_size(self, entry) -> int:
+        if not self.enabled or entry is None:
+            return 1
+        import math
+        if entry == "dp":
+            return math.prod(self.mesh.shape[a] for a in self.dp) if self.dp else 1
+        if entry == "tp":
+            return self.mesh.shape[self.tp] if self.tp else 1
+        if entry == "2d":
+            return self.axis_size("dp") * self.axis_size("tp")
+        return 1
+
+    def sharding(self, *entries) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*entries))
+
+    def constrain(self, x, *entries):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(*entries))
+
+    def constrain_act(self, x):
+        """Sequence-parallel residual-stream constraint for (B, T, D)
+        activations: batch over data axes and, when divisible, sequence over
+        the model axis — this is what keeps the per-layer backward stash
+        O(1/n_chips) instead of O(1/n_data).
+
+        Decode (T == 1): shard D over the data axes instead.  The
+        activation's d_model sharding then *matches* the FSDP (d_in) shard
+        of every consuming weight, so matmuls run as local partials + one
+        tiny psum(dp) of the activation — instead of all-gathering GBs of
+        weights per generated token."""
+        if not self.enabled:
+            return x
+        b, t, d = x.shape[0], x.shape[1], x.shape[-1]
+        import math
+        dp_size = math.prod(self.mesh.shape[a] for a in self.dp) if self.dp else 1
+        tp_size = self.mesh.shape[self.tp] if self.tp else 1
+        import os
+        if t == 1 and b < dp_size and not os.environ.get("REPRO_BASELINE"):
+            if self.mode == "decode" and d % self.axis_size("2d") == 0:
+                e_d = "2d"
+            elif self.dp and d % dp_size == 0:
+                e_d = "dp"
+            else:
+                e_d = None
+            return jax.lax.with_sharding_constraint(
+                x, self.sharding(None, None, e_d))
+        e_b = "dp" if (self.dp and b % dp_size == 0) else None
+        e_t = "tp" if (self.tp and t % tp_size == 0 and t > 1) else None
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding(e_b, e_t, None))
+
+
+LOCAL = ParallelCtx()
+
+
+# ---------------------------------------------------------------- param rules
+
+_RULES: list[tuple[str, tuple]] = [
+    # order matters: first match wins (patterns against the "/"-joined path)
+    (r"embed$", ("tp", None)),  # vocab-parallel embedding table
+    (r"head$", (None, "tp")),
+    (r"experts/(wi|wu)$", ("tp", "dp", None)),
+    (r"experts/wd$", ("tp", None, "dp")),
+    (r"router$", (None, None)),
+    (r"(wq|wk|wv|wi|wu|wzx|wdt|wq_b|wkv_b)$", ("dp", "tp")),
+    (r"(wo|wd|out_proj)$", ("tp", "dp")),
+    (r"(wq_a|wkv_a|wbc)$", ("dp", None)),
+    (r"conv_x$", (None, "tp")),
+    (r"conv_bc$", (None, None)),
+    (r"(A_log|D|dt_bias)$", ("tp",)),
+    (r"(bq|bk|bv)$", ("tp",)),
+    (r".*", ()),  # norms / scalars / anything 1-D: replicated
+]
+
+# Decode-serving rules (§Perf iteration 2): weights are 2-D sharded on
+# their OUTPUT dim over all mesh axes — no weight is ever gathered; the
+# only per-matmul communication is a psum of the (B=small, 1, d) activation
+# on the row-parallel side.  FSDP's d_in sharding is a *training* trade
+# (grads reduce-scatter); at one token per step it turns into GBs of
+# weight all-gathers per generated token.
+_DECODE_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("tp", None)),
+    (r"head$", (None, "2d")),
+    (r"experts/(wi|wu)$", ("tp", None, "dp")),
+    (r"experts/wd$", ("tp", "dp", None)),
+    (r"router$", (None, None)),
+    (r"(wq|wk|wv|wi|wu|wzx|wdt|wq_b|wkv_b)$", (None, "2d")),
+    (r"(wo|wd|out_proj)$", ("2d", None)),
+    (r"(wq_a|wkv_a|wbc)$", (None, "2d")),
+    (r"conv_x$", (None, "tp")),
+    (r"conv_bc$", (None, None)),
+    (r"(A_log|D|dt_bias)$", ("tp",)),
+    (r"(bq|bk|bv)$", ("2d",)),
+    (r".*", ()),
+]
+
+
+def _spec_for(path: str, shape: tuple, stacked: bool, ctx: ParallelCtx) -> P:
+    import os
+    ndim = len(shape)
+    rules = (_DECODE_RULES if ctx.mode == "decode"
+             and not os.environ.get("REPRO_BASELINE") else _RULES)
+    for pat, entries in rules:
+        if re.search(pat, path):
+            entries = list(entries)
+            break
+    if stacked:
+        entries = [None] + entries
+    # pad / trim to rank
+    entries = (entries + [None] * ndim)[:ndim]
+    # divisibility guard: drop axes the dim size can't be tiled over
+    entries = [e if shape[i] % ctx.axis_size(e) == 0 else None
+               for i, e in enumerate(entries)]
+    # vocab-parallel embedding fallback: odd vocab -> shard d_model instead
+    if re.search(r"embed$", path) and entries[0] is None and ctx.tp:
+        if shape[1] % ctx.axis_size("tp") == 0:
+            entries[1] = "tp"
+    return ctx.resolve(*entries)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_tree: Any, ctx: ParallelCtx):
+    """PartitionSpec pytree for a param (shape) tree.
+
+    Leaves under a ``groups`` subtree carry a stacked leading layer axis."""
+
+    def f(path, leaf):
+        p = _path_str(path)
+        return _spec_for(p, tuple(leaf.shape), stacked="groups" in p, ctx=ctx)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def param_shardings(params_tree: Any, ctx: ParallelCtx):
+    specs = param_specs(params_tree, ctx)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

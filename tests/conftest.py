@@ -1,0 +1,22 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama3-8b").reduced(), dtype="float32",
+        n_layers=2, d_model=64, vocab_size=256)
+
+
+@pytest.fixture(scope="session")
+def tiny_model_params(tiny_cfg):
+    from repro.models import build_model
+
+    model = build_model(tiny_cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    return model, params

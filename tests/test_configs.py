@@ -1,0 +1,58 @@
+"""Config registry + published parameter counts."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, list_configs
+
+EXPECTED_PARAMS_B = {
+    "llama-3.2-vision-11b": (9.0, 11.5),
+    "mamba2-780m": (0.7, 0.9),
+    "minitron-4b": (4.0, 5.5),
+    "command-r-plus-104b": (100.0, 108.0),
+    "command-r-35b": (28.0, 36.0),
+    "qwen1.5-4b": (3.5, 4.5),
+    "whisper-medium": (0.7, 1.1),
+    "deepseek-v2-236b": (230.0, 240.0),
+    "deepseek-v3-671b": (665.0, 678.0),
+    "jamba-v0.1-52b": (49.0, 53.0),
+    "llama3-8b": (7.8, 8.3),
+}
+
+
+def test_registry_covers_all_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert set(ASSIGNED_ARCHS) <= set(list_configs())
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+
+
+@pytest.mark.parametrize("name", list(EXPECTED_PARAMS_B))
+def test_param_counts_match_published(name):
+    cfg = get_config(name)
+    lo, hi = EXPECTED_PARAMS_B[name]
+    n = cfg.n_params() / 1e9
+    assert lo <= n <= hi, f"{name}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("name", list(ASSIGNED_ARCHS))
+def test_reduced_configs_are_small(name):
+    r = get_config(name).reduced()
+    assert r.n_params() < 5e7
+    assert r.scan_period == get_config(name).scan_period or r.scan_period <= 4
+
+
+def test_moe_active_params():
+    v3 = get_config("deepseek-v3-671b")
+    assert v3.n_params(active_only=True) / 1e9 < 40.0
+
+
+def test_layer_patterns():
+    jamba = get_config("jamba-v0.1-52b")
+    kinds = jamba.layer_kinds()
+    assert kinds.count("attn") == 4 and kinds.count("mamba") == 28
+    ffns = jamba.ffn_kinds()
+    assert ffns.count("moe") == 16
+    vlm = get_config("llama-3.2-vision-11b")
+    assert vlm.layer_kinds().count("cross") == 8
+    v3 = get_config("deepseek-v3-671b")
+    assert v3.ffn_kinds()[:3] == ("dense",) * 3
+    assert v3.ffn_kinds().count("moe") == 58

@@ -1,0 +1,76 @@
+"""Token-importance strategies (paper Sec. 4.3)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.importance import (
+    STRATEGIES,
+    ImportanceInputs,
+    get_strategy,
+    normalize_scores,
+)
+
+
+def _inputs(b=2, t=64, d=16, seed=0):
+    k = jax.random.key(seed)
+    z = jax.random.normal(k, (b, t, d))
+    return ImportanceInputs(
+        z_in=z,
+        z_out=z + 0.1 * jax.random.normal(jax.random.fold_in(k, 1), (b, t, d)),
+        tokens=jax.random.randint(jax.random.fold_in(k, 2), (b, t), 0, 99),
+        attn_colsum=jax.random.uniform(jax.random.fold_in(k, 3), (b, t)),
+        token_counts=jnp.arange(1.0, 100.0),
+    )
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_shapes_and_finiteness(name):
+    inp = _inputs()
+    r = get_strategy(name)(inp, **({"n": 16} if "first" in name else {}))
+    assert r.shape == (2, 64)
+    assert bool(jnp.all(jnp.isfinite(r)))
+    assert float(r.min()) >= 0.0
+
+
+def test_normalize_scores_bounds():
+    raw = jax.random.normal(jax.random.key(0), (3, 50)) * 10
+    r = normalize_scores(raw, 0.01, 1.0)
+    assert jnp.allclose(r.min(axis=-1), 0.01, atol=1e-5)
+    assert jnp.allclose(r.max(axis=-1), 1.0, atol=1e-5)
+
+
+def test_first_n_masks():
+    inp = _inputs()
+    r = get_strategy("first_n")(inp, n=16)
+    assert bool(jnp.all(r[:, :16] == 1.0)) and bool(jnp.all(r[:, 16:] == 0.0))
+    r = get_strategy("first_last_n")(inp, n=16)
+    assert bool(jnp.all(r[:, :8] == 1.0)) and bool(jnp.all(r[:, -8:] == 1.0))
+    assert float(r.sum()) == 2 * 16.0
+
+
+def test_attn_con_falls_back_without_attention():
+    inp = _inputs()
+    inp_no_attn = ImportanceInputs(z_in=inp.z_in)
+    r = get_strategy("attn_con")(inp_no_attn, r_min=0.01)
+    r_norm = get_strategy("act_norm")(
+        ImportanceInputs(z_in=inp.z_in), r_min=0.01)
+    assert jnp.allclose(r, r_norm)
+
+
+def test_token_freq_prefers_rare_tokens():
+    inp = _inputs()
+    r = get_strategy("token_freq")(inp, r_min=0.01)
+    flat_t = inp.tokens.reshape(-1)
+    flat_r = r.reshape(-1)
+    rare = flat_r[jnp.argmin(flat_t)]  # counts grow with id here
+    common = flat_r[jnp.argmax(flat_t)]
+    assert float(rare) > float(common)
+
+
+def test_token_sim_chunked_equals_direct():
+    from repro.core.importance import token_sim
+
+    inp = _inputs(t=64)
+    a = token_sim(inp, chunk=16)
+    b = token_sim(inp, chunk=64)
+    assert jnp.allclose(a, b, atol=1e-4)

@@ -1,0 +1,67 @@
+"""Optimizers, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import cosine_schedule, linear_warmup, make_optimizer
+from repro.optim.compression import ef_compress, init_error_state
+
+
+def _minimize(opt, steps=60):
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3), "m": jnp.zeros((4, 3))}
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(
+            (p["m"] - 1.0) ** 2)
+
+    state = opt.init(params)
+    for s in range(steps):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(params, g, state, jnp.int32(s))
+    return float(loss_fn(params))
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor", "sgd"])
+def test_optimizers_minimize(name):
+    opt = make_optimizer(name, 0.05)
+    assert _minimize(opt) < 0.3
+
+
+def test_adamw8bit_tracks_fp32():
+    l_fp = _minimize(make_optimizer("adamw", 0.05))
+    l_q8 = _minimize(make_optimizer("adamw8bit", 0.05))
+    assert abs(l_fp - l_q8) < 0.2
+
+
+def test_adafactor_state_is_factored():
+    opt = make_optimizer("adafactor", 0.01)
+    params = {"w": jnp.zeros((64, 32))}
+    state = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(state))
+    assert n_state <= 64 + 32  # r + c, no full moments
+
+
+def test_schedules():
+    f = cosine_schedule(1.0, 10, 100)
+    assert float(f(0)) < 0.2
+    assert float(f(10)) == pytest.approx(1.0, abs=0.01)
+    assert float(f(99)) < 0.2
+    g = linear_warmup(2.0, 5)
+    assert float(g(100)) == 2.0
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """sum of compressed grads -> sum of true grads (EF property)."""
+    key = jax.random.key(0)
+    grads = [0.01 * jax.random.normal(jax.random.fold_in(key, i), (32, 16))
+             for i in range(20)]
+    err = init_error_state({"g": grads[0]})
+    total_c = jnp.zeros_like(grads[0])
+    for g in grads:
+        c, err = ef_compress({"g": g}, err)
+        total_c = total_c + c["g"]
+    total = sum(grads)
+    rel = float(jnp.abs(total_c - total).max() /
+                (jnp.abs(total).max() + 1e-9))
+    assert rel < 0.05

@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expansion import expand_dataset
+from repro.core.gptq import prepare_hessian
+from repro.core.importance import normalize_scores
+from repro.core.ldlq import e8_nearest
+from repro.core.quantizer import (
+    QuantSpec,
+    pack_codes,
+    quantize_weight_rtn,
+    unpack_codes,
+)
+from repro.core.rotation import random_hadamard
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(bits=st.sampled_from([2, 3, 4, 8]),
+       d_in=st.sampled_from([16, 32, 48]),
+       d_out=st.sampled_from([8, 24]),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_rtn_error_within_half_step(bits, d_in, d_out, seed):
+    w = jax.random.normal(jax.random.key(seed), (d_in, d_out))
+    spec = QuantSpec(bits=bits, group_size=-1, sym=False)
+    deq, q, s, z = quantize_weight_rtn(w, spec)
+    assert float(jnp.max(jnp.abs(deq - w) / s)) <= 0.5 + 1e-3
+
+
+@given(bits=st.sampled_from([2, 3, 4, 8]),
+       d_in=st.integers(1, 70), d_out=st.integers(1, 20),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(bits, d_in, d_out, seed):
+    q = jax.random.randint(jax.random.key(seed), (d_in, d_out), 0, 2 ** bits)
+    assert bool(jnp.all(unpack_codes(pack_codes(q, bits), bits, d_in) == q))
+
+
+@given(n=st.sampled_from([16, 64, 96, 160]), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_rotation_is_orthogonal_and_norm_preserving(n, seed):
+    q = random_hadamard(jax.random.key(seed), n)
+    x = jax.random.normal(jax.random.key(seed + 1), (5, n))
+    np.testing.assert_allclose(np.asarray(q @ q.T), np.eye(n), atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x @ q, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-4)
+
+
+@given(m=st.sampled_from([2, 4, 8]), t=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_expansion_rows_are_rotations(m, t, seed):
+    toks = jax.random.randint(jax.random.key(seed), (2, t), 0, 1000)
+    out = expand_dataset(toks, m)
+    assert out.shape == (2 * m, t)
+    for i in range(m):
+        assert bool(jnp.all(out[i] == jnp.roll(toks[0], (i * t) // m)))
+
+
+@given(r_min=st.floats(0.001, 0.5), seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_normalize_scores_in_range(r_min, seed):
+    raw = jax.random.normal(jax.random.key(seed), (3, 40)) * 100
+    r = normalize_scores(raw, r_min, 1.0)
+    assert float(r.min()) >= r_min - 1e-4
+    assert float(r.max()) <= 1.0 + 1e-4
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_e8_nearest_is_idempotent_and_valid(seed):
+    y = jax.random.normal(jax.random.key(seed), (16, 8)) * 3
+    p = e8_nearest(y)
+    # idempotent: lattice points map to themselves
+    np.testing.assert_allclose(np.asarray(e8_nearest(p)), np.asarray(p),
+                               atol=1e-5)
+    # nearest within the two cosets actually checked: distance to p <=
+    # distance to plain rounding in D8
+    from repro.core.ldlq import _nearest_d8
+    d_p = jnp.sum((y - p) ** 2, -1)
+    d_a = jnp.sum((y - _nearest_d8(y)) ** 2, -1)
+    assert bool(jnp.all(d_p <= d_a + 1e-5))
+
+
+@given(n=st.sampled_from([8, 24, 32]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_prepared_hessian_is_spd(n, d, seed):
+    x = jax.random.normal(jax.random.key(seed), (n, d))
+    h = prepare_hessian(2.0 * x.T @ x)
+    eig = jnp.linalg.eigvalsh(h)
+    assert float(eig.min()) > 0.0

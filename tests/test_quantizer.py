@@ -1,0 +1,44 @@
+"""Scalar quantizer + packing."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quantizer import (
+    QuantSpec,
+    dequantize,
+    find_params,
+    pack_codes,
+    quantize_rtn,
+    quantize_weight_rtn,
+    unpack_codes,
+)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("sym", [True, False])
+def test_rtn_roundtrip_error_bound(bits, sym):
+    w = jax.random.normal(jax.random.key(bits), (64, 32))
+    spec = QuantSpec(bits=bits, group_size=16, sym=sym)
+    deq, q, s, z = quantize_weight_rtn(w, spec)
+    # error bounded by half a quantization step per group
+    step = jnp.repeat(s, 16, axis=0)
+    assert float(jnp.max(jnp.abs(deq - w) / step)) <= 0.5 + 1e-3
+    assert int(q.min()) >= 0 and int(q.max()) <= spec.maxq
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_pack_unpack_identity(bits):
+    q = jax.random.randint(jax.random.key(bits), (100, 24), 0, 2 ** bits)
+    packed = pack_codes(q, bits)
+    assert packed.dtype == jnp.uint32
+    out = unpack_codes(packed, bits, 100)
+    assert bool(jnp.all(out == q))
+
+
+def test_asym_covers_range():
+    w = jnp.concatenate([jnp.full((8, 4), -1.0), jnp.full((8, 4), 3.0)])
+    spec = QuantSpec(bits=4, group_size=-1, sym=False)
+    s, z = find_params(w, spec)
+    q = quantize_rtn(w, s, z, spec)
+    deq = dequantize(q, s, z)
+    assert float(jnp.abs(deq - w).max()) < 0.3

@@ -1,0 +1,77 @@
+"""Rotation (computational invariance) + Hadamard construction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.rotation import (
+    hadamard_matrix,
+    random_hadamard,
+    random_orthogonal,
+    rotate_model,
+)
+from repro.models import build_model
+
+FAMILIES = ["qwen1.5-4b", "mamba2-780m", "deepseek-v2-236b",
+            "jamba-v0.1-52b", "llama-3.2-vision-11b", "whisper-medium",
+            "command-r-35b"]
+
+
+@pytest.mark.parametrize("n", [2, 8, 64, 128])
+def test_hadamard_orthonormal(n):
+    h = hadamard_matrix(n)
+    assert jnp.allclose(h @ h.T, jnp.eye(n), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 96, 128, 384])  # incl. non-powers of two
+def test_random_hadamard_orthogonal(n):
+    q = random_hadamard(jax.random.key(0), n)
+    assert jnp.allclose(q @ q.T, jnp.eye(n), atol=1e-4)
+    assert jnp.allclose(q.T @ q, jnp.eye(n), atol=1e-4)
+
+
+def test_random_orthogonal():
+    q = random_orthogonal(jax.random.key(1), 33)
+    assert jnp.allclose(q @ q.T, jnp.eye(33), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_rotation_invariance(name):
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32",
+                              capacity_factor=100.0)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    # non-trivial norm scales exercise the fusion
+    params = jax.tree_util.tree_map_with_path(
+        lambda p, x: x * 1.3 if "norm" in str(p) and x.ndim == 1 else x,
+        params)
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["media"] = jax.random.normal(jax.random.key(2),
+                                        (2, cfg.n_media_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        kw["frames"] = jax.random.normal(jax.random.key(3),
+                                         (2, 32, cfg.d_model))
+    base = model.logits(params, toks, **kw)
+    rparams, _ = rotate_model(params, cfg, model, jax.random.key(9))
+    rot = model.logits(rparams, toks, **kw)
+    rel = float(jnp.abs(base - rot).max() / jnp.abs(base).max())
+    assert rel < 5e-4, f"{name}: invariance broken ({rel:.2e})"
+
+
+def test_rotation_reduces_outliers(tiny_cfg, tiny_model_params):
+    """QuaRot's premise: rotation shrinks the weight kurtosis / max ratio."""
+    model, params = tiny_model_params
+    rparams, _ = rotate_model(params, tiny_cfg, model, jax.random.key(3))
+
+    def outlier_ratio(p):
+        ws = [w for path, w in
+              jax.tree_util.tree_flatten_with_path(p["groups"])[0]
+              if w.ndim >= 2]
+        return max(float(jnp.max(jnp.abs(w)) /
+                         (jnp.mean(jnp.abs(w)) + 1e-9)) for w in ws)
+
+    assert outlier_ratio(rparams) <= outlier_ratio(params) * 1.5
