@@ -24,11 +24,11 @@ HBM_BW = 819e9
 
 
 def _time(fn, *args, reps=3) -> float:
-    fn(*args)  # compile/warm
-    t0 = time.time()
+    jax.block_until_ready(fn(*args))  # compile/warm, fully retired
+    t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6  # us
+    return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
 def run(table: Table | None = None):

@@ -23,9 +23,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_heuristics, fig3_dynamic, fig4_expansion,
-                            kernels_bench, roofline, table1_chunks,
-                            table2_main, table4_calib, table5_bits,
-                            table6_vq)
+                            kernels_bench, pipeline_bench, roofline,
+                            table1_chunks, table2_main, table4_calib,
+                            table5_bits, table6_vq)
 
     benches = {
         "table1_chunks": lambda t: table1_chunks.run(table=t),
@@ -37,6 +37,7 @@ def main() -> None:
         "table5_bits": lambda t: table5_bits.run(table=t),
         "table6_vq": lambda t: table6_vq.run(table=t),
         "kernels": lambda t: kernels_bench.run(table=t),
+        "pipeline": lambda t: pipeline_bench.run(table=t),
         "roofline": lambda t: roofline.run(table=t),
     }
     selected = (args.only.split(",") if args.only else list(benches))

@@ -10,7 +10,11 @@ Two independent axes of parallelism, matching DESIGN.md §5:
   * weight-parallel solves — GPTQ solves for different weights (all
     experts of a layer, or same-shaped weights across layers) are
     independent: `gptq_quantize_batched` vmaps the blocked solver so one
-    pjit call distributes the batch over the model axis.
+    pjit call distributes the batch over the model axis.  This is the
+    solver the calibration engine's shape-grouped solves dispatch to
+    (see pipeline.quantize_layer_weights): q/k/v-style same-shape weights
+    and stacked (E, d_in, d_out) expert tensors arrive pre-stacked along
+    the leading axis.
 """
 from __future__ import annotations
 

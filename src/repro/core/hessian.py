@@ -1,9 +1,13 @@
 """Step 3 input: weighted second-order statistics H = 2 · X R² Xᵀ.
 
-``accumulate`` is the pure-jnp oracle; the Pallas ``gram`` kernel
-(kernels/gram) computes the same tiled product on TPU.  The distributed
-variant shards calibration tokens over the data axes and psums the (d, d)
-Hessian — see core/distributed.
+``accumulate`` is the single entry point the calibration engine routes every
+dense *and* stacked-expert update through: 2-D inputs ``(N, d)`` produce one
+``(d, d)`` gram; 3-D inputs ``(E, C, d)`` (per-expert capacity buffers)
+produce a batch of ``(E, d, d)`` independent grams.  ``use_kernel=True``
+dispatches the tiled Pallas ``gram`` kernel (kernels/gram) instead of the
+pure-jnp contraction — the pipeline turns this on automatically on TPU.
+The distributed variant shards calibration tokens over the data axes and
+psums the (d, d) Hessian — see core/distributed.
 """
 from __future__ import annotations
 
@@ -13,16 +17,20 @@ import jax.numpy as jnp
 
 def accumulate(h: jax.Array | None, x: jax.Array, r: jax.Array | None = None,
                *, use_kernel: bool = False) -> jax.Array:
-    """h: (d, d) fp32 or None; x: (N, d) tokens-by-features;
-    r: (N,) token importances (None = uniform).  Returns h + 2·XᵀR²X."""
-    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    """h: (d, d) fp32 (or (E, d, d) for stacked experts) or None;
+    x: (N, d) tokens-by-features or (E, C, d) expert capacity buffers;
+    r: (N,) / (E, C) token importances (None = uniform).
+    Returns h + 2·XᵀR²X (batched over the leading expert axis for 3-D x)."""
+    lead = x.shape[:-2] if x.ndim >= 3 else ()
+    xf = x.reshape((-1,) + x.shape[-2:]).astype(jnp.float32)  # (B, N, d)
     if r is not None:
-        xf = xf * r.reshape(-1, 1).astype(jnp.float32)
+        xf = xf * r.reshape(xf.shape[0], xf.shape[1], 1).astype(jnp.float32)
     if use_kernel:
         from repro.kernels.gram import ops as gram_ops
         upd = 2.0 * gram_ops.weighted_gram(xf)
     else:
-        upd = 2.0 * xf.T @ xf
+        upd = 2.0 * jnp.einsum("bnd,bne->bde", xf, xf)
+    upd = upd.reshape(lead + upd.shape[-2:])
     if h is None:
         return upd
     return h + upd

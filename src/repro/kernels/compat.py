@@ -1,0 +1,11 @@
+"""Version shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; accept
+either so the kernels run on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

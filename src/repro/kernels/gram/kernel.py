@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _gram_kernel(x_i_ref, x_j_ref, r_ref, o_ref):
@@ -48,7 +49,7 @@ def weighted_gram_pallas(x: jax.Array, r: jax.Array, *, d_blk: int = 256,
         ],
         out_specs=pl.BlockSpec((d_blk, d_blk), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, x, r2)

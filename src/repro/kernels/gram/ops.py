@@ -12,7 +12,14 @@ def _interpret() -> bool:
 
 
 def weighted_gram(x: jax.Array, r: jax.Array | None = None) -> jax.Array:
-    """(X·r)ᵀ(X·r) with fp32 accumulation; pads to kernel-aligned tiles."""
+    """(X·r)ᵀ(X·r) with fp32 accumulation; pads to kernel-aligned tiles.
+
+    A 3-D ``x`` of shape (E, N, d) (stacked-expert capacity buffers) maps
+    to E independent grams via vmap over the Pallas grid."""
+    if x.ndim == 3:
+        if r is None:
+            return jax.vmap(weighted_gram)(x)
+        return jax.vmap(weighted_gram)(x, r)
     n, d = x.shape
     if r is None:
         r = jnp.ones((n,), jnp.float32)

@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _qmm_kernel(x_ref, wq_ref, scale_ref, zero_ref, o_ref, *,
@@ -73,7 +74,7 @@ def quant_matmul_pallas(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
         ],
         out_specs=pl.BlockSpec((m_blk, n_blk), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, scale, zero)

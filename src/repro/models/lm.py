@@ -150,9 +150,15 @@ def _gather_seq(x, ctx: ParallelCtx):
     return ctx.constrain(x, "dp", None, None)
 
 
-def apply_block(p, cfg, meta: BlockMeta, x, *, positions, media=None,
+def apply_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None,
                 ctx: ParallelCtx = LOCAL):
-    """Full-sequence forward (train / prefill). Returns (x, aux, cache)."""
+    """Full-sequence forward (train / prefill). Returns (x, aux, cache).
+
+    ``positions=None`` defaults to ``arange(T)`` — lets callers that jit
+    over varying sequence lengths (the calibration engine's per-meta trace
+    cache) derive positions inside the trace instead of threading them."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
     aux = jnp.zeros((), jnp.float32)
     # attention input stays sequence-sharded (QKV weights are the small
     # ones); only the FFN gathers full-T activations — see _gather_seq
@@ -256,7 +262,7 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
     return x, new_cache
 
 
-def capture_block(p, cfg, meta: BlockMeta, x, *, positions, media=None):
+def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
     """Calibration forward of one block for the RSQ pipeline.
 
     Returns (y, caps, domains, colsum):
@@ -268,6 +274,8 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions, media=None):
                  their own slot->token map in caps["__moe_slot_token"])
       colsum   — (B, T) attention-concentration scores or None
     """
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
     caps: dict[str, Any] = {}
     dom: dict[str, str] = {}
     colsum = None

@@ -1,0 +1,148 @@
+"""Calibration-engine performance contracts (trace cache + batched solves).
+
+The fused engine must compile O(distinct metas) capture/apply programs —
+not O(layers) — and its shape-grouped batched GPTQ solves must agree with
+the sequential per-weight solver."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import RSQConfig, RSQPipeline
+from repro.core.distributed import gptq_quantize_batched
+from repro.core.gptq import gptq_quantize
+from repro.core.hessian import accumulate
+from repro.core.pipeline import quantize_layer_weights
+from repro.core.quantizer import QuantSpec
+
+
+@pytest.fixture(scope="module")
+def toy4():
+    """4-layer homogeneous toy model (one distinct BlockMeta)."""
+    cfg = dataclasses.replace(
+        get_config("llama3-8b").reduced(), dtype="float32",
+        n_layers=4, d_model=64, vocab_size=256)
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    calib = jax.random.randint(jax.random.key(1), (8, 32), 0, cfg.vocab_size)
+    return model, params, calib
+
+
+def test_trace_cache_once_per_meta(toy4):
+    model, params, calib = toy4
+    pipe = RSQPipeline(model, RSQConfig(bits=4, rotate=False,
+                                        importance="attn_con"))
+    _, report = pipe.run(params, calib, batch_size=4)
+    assert len(report["layers"]) == 4
+    # homogeneous stack -> exactly one capture trace and one apply trace
+    assert pipe.trace_counts == {"capture": 1, "apply": 1}
+
+
+def test_trace_cache_disabled_traces_per_layer(toy4):
+    """trace_cache=False restores the legacy fresh-jit-per-layer behaviour
+    (the benchmark baseline) — compile count scales with depth again."""
+    model, params, calib = toy4
+    pipe = RSQPipeline(model, RSQConfig(bits=4, rotate=False,
+                                        importance="attn_con",
+                                        trace_cache=False))
+    pipe.run(params, calib, batch_size=4)
+    assert pipe.trace_counts == {"capture": 4, "apply": 4}
+
+
+def test_ragged_tail_batch_retraces_once(toy4):
+    """A ragged last batch costs one extra trace total, not one per layer."""
+    model, params, calib = toy4
+    pipe = RSQPipeline(model, RSQConfig(bits=4, rotate=False,
+                                        importance="attn_con"))
+    pipe.run(params, calib, batch_size=6)  # batches of 6 and 2
+    assert pipe.trace_counts == {"capture": 2, "apply": 2}
+
+
+def _solve_set(n, d_in=64, d_out=48, seed=0):
+    ws, hs = [], []
+    for s in range(n):
+        w = jax.random.normal(jax.random.key(seed + s), (d_in, d_out)) * 0.5
+        x = jax.random.normal(jax.random.key(seed + s + 100), (256, d_in))
+        ws.append(w)
+        hs.append(accumulate(None, x))
+    return ws, hs
+
+
+@pytest.mark.parametrize("spec", [
+    QuantSpec(bits=3, group_size=32),
+    QuantSpec(bits=4, group_size=-1),
+])
+def test_batched_solve_matches_sequential(spec):
+    ws, hs = _solve_set(3)
+    seq = [gptq_quantize(w, h, spec, block=32) for w, h in zip(ws, hs)]
+    bat = gptq_quantize_batched(jnp.stack(ws), jnp.stack(hs), spec, block=32)
+    for i, s in enumerate(seq):
+        assert np.array_equal(np.asarray(s["q"]), np.asarray(bat["q"][i]))
+        np.testing.assert_allclose(np.asarray(s["w_deq"]),
+                                   np.asarray(bat["w_deq"][i]), atol=2e-6)
+
+
+def test_shape_grouped_layer_solve_matches_sequential():
+    """quantize_layer_weights groups q/k/v-style same-shape weights into one
+    batched solve; the result must match solving each weight alone."""
+    ws, hs = _solve_set(3)
+    p_block = {"mixer": {"wq": ws[0], "wk": ws[1], "wv": ws[2]}}
+    hessians = {"mixer/wq": hs[0], "mixer/wk": hs[1], "mixer/wv": hs[2]}
+    rsq = RSQConfig(bits=3, group_size=32, gptq_block=32)
+    new_p, report = quantize_layer_weights(p_block, hessians, rsq)
+    for name, w, h in zip(("wq", "wk", "wv"), ws, hs):
+        ref = gptq_quantize(w, h, rsq.spec(), damp=rsq.damp, block=32)
+        np.testing.assert_allclose(np.asarray(new_p["mixer"][name]),
+                                   np.asarray(ref["w_deq"]), atol=2e-6)
+        assert report[f"mixer/{name}"] == pytest.approx(float(ref["err"]),
+                                                        rel=1e-3)
+
+
+def test_stacked_experts_use_batched_path():
+    """(E, d_in, d_out) expert stacks solve in one batched call and match
+    per-expert sequential solves."""
+    ws, hs = _solve_set(4, seed=7)
+    w3, h3 = jnp.stack(ws), jnp.stack(hs)
+    p_block = {"ffn": {"experts": {"wi": w3}}}
+    hessians = {"ffn/experts/wi": h3}
+    rsq = RSQConfig(bits=3, group_size=32, gptq_block=32)
+    new_p, report = quantize_layer_weights(p_block, hessians, rsq)
+    deq = np.asarray(new_p["ffn"]["experts"]["wi"])
+    for e in range(4):
+        ref = gptq_quantize(w3[e], h3[e], rsq.spec(), damp=rsq.damp, block=32)
+        np.testing.assert_allclose(deq[e], np.asarray(ref["w_deq"]),
+                                   atol=2e-6)
+
+
+def test_single_expert_stack_solves():
+    """A lone (1, d_in, d_out) expert stack must stay on the batched path
+    (regression: the lone-weight fast path once fed it to the 2-D solver)."""
+    ws, hs = _solve_set(1, seed=11)
+    w3, h3 = jnp.stack(ws), jnp.stack(hs)
+    rsq = RSQConfig(bits=3, group_size=32, gptq_block=32)
+    new_p, _ = quantize_layer_weights({"ffn": {"experts": {"wi": w3}}},
+                                      {"ffn/experts/wi": h3}, rsq)
+    ref = gptq_quantize(w3[0], h3[0], rsq.spec(), damp=rsq.damp, block=32)
+    np.testing.assert_allclose(np.asarray(new_p["ffn"]["experts"]["wi"][0]),
+                               np.asarray(ref["w_deq"]), atol=2e-6)
+
+
+def test_gram_kernel_flag_matches_oracle():
+    """use_gram_kernel routes hess.accumulate through the Pallas gram path
+    (interpret/ref off-TPU) with identical results, incl. 3-D experts."""
+    x = jax.random.normal(jax.random.key(0), (128, 64))
+    r = jax.random.uniform(jax.random.key(1), (128,))
+    np.testing.assert_allclose(
+        np.asarray(accumulate(None, x, r, use_kernel=True)),
+        np.asarray(accumulate(None, x, r, use_kernel=False)), atol=1e-3)
+    xe = jax.random.normal(jax.random.key(2), (4, 32, 64))
+    re = jax.random.uniform(jax.random.key(3), (4, 32))
+    got = accumulate(None, xe, re, use_kernel=True)
+    want = accumulate(None, xe, re, use_kernel=False)
+    assert got.shape == (4, 64, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
