@@ -1,16 +1,29 @@
 """End-to-end calibration-engine benchmark (perf trajectory guard).
 
-Quantizes a tiny multi-layer homogeneous model twice — once with the fused
-trace-cached engine (the default) and once with the legacy
-fresh-jit-per-layer baseline (``trace_cache=False``) — and reports
+Two axes, both on a tiny multi-layer homogeneous model:
 
-  * XLA compilation counts for the capture/apply programs (the fused engine
-    must compile O(distinct metas), the baseline O(layers)), and
-  * per-layer / total quantization wall time.
+  * **trace cache** — quantize once with the fused trace-cached engine (the
+    default) and once with the legacy fresh-jit-per-layer baseline
+    (``trace_cache=False``): XLA compilation counts (O(distinct metas) vs
+    O(layers)) and cold wall time.
+  * **layer scheduler** — warm steady-state wall time of the
+    ``SequentialScheduler`` vs the ``OverlappedScheduler`` (same compiled
+    programs, different dispatch: the overlapped schedule dispatches layer
+    i's apply and layer i+1's capture before layer i's solve has finished,
+    skips the last layer's dead apply pass, and defers every blocking host
+    sync to one end-of-stack drain, where the lock-step schedule blocks
+    once per layer).  Interleaved repeat runs (min) so machine drift hits
+    both schedulers equally.  On CPU the delta is bounded by host
+    wake/dispatch latency per layer; it grows with real device/host sync
+    cost on accelerator backends, as does the overlapped scheduler's
+    concurrent compile prewarm (a no-op on the CPU backend, whose
+    compilations serialize process-wide).
 
-Results also land in ``BENCH_pipeline.json`` at the repo root so future
-PRs have a perf trajectory to regress against.  Wall times on this
-container are CPU numbers; the compile counts are the portable claim.
+Results land in ``BENCH_pipeline.json`` at the repo root so future PRs
+have a perf trajectory to regress against (``benchmarks/run.py`` fails
+loudly on >20% regressions).  Wall times on this container are CPU
+numbers; the compile counts and the sequential/overlapped ordering are the
+portable claims.
 """
 from __future__ import annotations
 
@@ -30,13 +43,15 @@ from benchmarks.common import Table
 OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_pipeline.json"
 
 N_LAYERS = 4
-CALIB_N, CALIB_T = 8, 64
+CALIB_N, CALIB_T = 16, 64
+BATCH = 4
+WARM_REPS = 7
 
 
-def _toy_model():
+def _toy_model(d_model: int = 64):
     cfg = dataclasses.replace(
         get_config("llama3-8b").reduced(), dtype="float32",
-        n_layers=N_LAYERS, d_model=64, vocab_size=256)
+        n_layers=N_LAYERS, d_model=d_model, vocab_size=256)
     model = build_model(cfg)
     params = jax.jit(model.init)(jax.random.key(0))
     calib = jax.random.randint(jax.random.key(1), (CALIB_N, CALIB_T), 0,
@@ -48,10 +63,10 @@ def _run_engine(model, params, calib, *, trace_cache: bool) -> dict:
     jax.clear_caches()  # process-global jit cache would leak solver
     # compilations from one engine run into the other
     rsq = RSQConfig(bits=4, rotate=False, importance="attn_con",
-                    trace_cache=trace_cache)
+                    trace_cache=trace_cache, scheduler="sequential")
     pipe = RSQPipeline(model, rsq)
     t0 = time.perf_counter()
-    _, report = pipe.run(params, calib, batch_size=4)
+    _, report = pipe.run(params, calib, batch_size=BATCH)
     total_s = time.perf_counter() - t0
     layer_s = [l["seconds"] for l in report["layers"].values()]
     return {
@@ -61,6 +76,39 @@ def _run_engine(model, params, calib, *, trace_cache: bool) -> dict:
         "per_layer_s": layer_s,
         "mean_layer_s": round(sum(layer_s) / len(layer_s), 3),
         "compiles": dict(pipe.trace_counts),
+    }
+
+
+def _warm_schedulers() -> dict:
+    """Warm steady-state timing: compile once per scheduler, then time
+    interleaved repeat runs on the same pipelines (the per-meta trace cache
+    lives on the pipeline, so repeats are dispatch + execute only — exactly
+    the path the scheduler controls).  Interleaving decorrelates machine
+    drift from the scheduler identity; a d=128 toy keeps each run long
+    enough (~0.2 s) that the container's timer jitter stays well below the
+    scheduling delta."""
+    model, params, calib = _toy_model(d_model=128)
+    pipes, times = {}, {}
+    for name in ("sequential", "overlapped"):
+        rsq = RSQConfig(bits=4, rotate=False, importance="attn_con",
+                        scheduler=name)
+        pipes[name] = RSQPipeline(model, rsq)
+        pipes[name].run(params, calib, batch_size=BATCH)  # compile warm-up
+        times[name] = []
+    for _ in range(WARM_REPS):
+        for name, pipe in pipes.items():
+            t0 = time.perf_counter()
+            q, _ = pipe.run(params, calib, batch_size=BATCH)
+            jax.block_until_ready(jax.tree.leaves(q))
+            times[name].append(time.perf_counter() - t0)
+    return {
+        name: {
+            "scheduler": name,
+            "total_s": round(min(ts), 4),
+            "runs_s": [round(t, 4) for t in ts],
+            "compiles": dict(pipes[name].trace_counts),  # warm: 0 retraces
+        }
+        for name, ts in times.items()
     }
 
 
@@ -90,8 +138,25 @@ def run(table: Table | None = None):
               f"compile_ratio={base['compiles']['capture']}"
               f":{fused['compiles']['capture']}")
 
+    schedulers = _warm_schedulers()
+    for name, res in schedulers.items():
+        table.add(f"scheduler_{name}_warm", res["total_s"] * 1e6,
+                  f"warm_total_s={res['total_s']} "
+                  f"retraces={res['compiles']['capture']}")
+    overlap_speedup = (schedulers["sequential"]["total_s"]
+                       / max(schedulers["overlapped"]["total_s"], 1e-9))
+    table.add("overlapped_vs_sequential_warm", 0.0,
+              f"speedup={overlap_speedup:.2f}x "
+              f"blocking_syncs={N_LAYERS}:1")
+
     payload = {"fused": fused, "baseline": base,
                "speedup": round(speedup, 3),
+               "schedulers": schedulers,
+               "overlap_speedup": round(overlap_speedup, 3),
+               # structural per-run count (deterministic, backend-free):
+               # host syncs that block further dispatch — once per layer
+               # lock-step vs one end-of-stack drain overlapped
+               "blocking_syncs": {"sequential": N_LAYERS, "overlapped": 1},
                "backend": jax.default_backend()}
     OUT_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     return table

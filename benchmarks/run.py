@@ -6,20 +6,93 @@ the derived ppl / claim fields (see benchmarks/common.py docstring).
 
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --only table2_main,roofline
+
+Benches that persist a ``BENCH_*.json`` at the repo root (currently the
+pipeline bench) are regression-guarded: the checked-in JSON is snapshotted
+before the run and every ``total_s`` field of the fresh result is compared
+against it — any wall-time >20% over the baseline fails the run loudly
+(exit 1).  ``--no-regression-check`` skips the guard (e.g. when moving the
+baselines to a new machine on purpose).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 from benchmarks.common import Table
+
+REPO = Path(__file__).resolve().parent.parent
+REGRESSION_TOL = 1.20  # fail when fresh total_s > baseline * this
+
+
+def _timing_fields(payload, prefix=""):
+    """Yield (dotted_path, value) for every ``total_s`` leaf."""
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            p = f"{prefix}.{k}" if prefix else k
+            if k == "total_s" and isinstance(v, (int, float)):
+                yield p, float(v)
+            else:
+                yield from _timing_fields(v, p)
+
+
+def snapshot_baselines() -> dict[str, dict]:
+    out = {}
+    for f in sorted(REPO.glob("BENCH_*.json")):
+        try:
+            out[f.name] = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+    return out
+
+
+def check_regressions(baselines: dict[str, dict]) -> list[str]:
+    """Compare fresh BENCH_*.json files against the pre-run snapshot.
+    Returns human-readable regression lines (empty = healthy).
+
+    On a regression the pre-run baseline is written back to disk: the
+    benches overwrite their JSON unconditionally, and without the restore
+    a second run would snapshot the regressed numbers as the new baseline
+    and pass — the guard must stay sticky until the slowdown is fixed (or
+    the baseline is re-recorded with --no-regression-check)."""
+    bad = []
+    for name, base in baselines.items():
+        path = REPO / name
+        if not path.exists():
+            continue
+        try:
+            fresh = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            bad.append(f"{name}: fresh result unreadable")
+            continue
+        base_t = dict(_timing_fields(base))
+        file_bad = []
+        for field, now in _timing_fields(fresh):
+            was = base_t.get(field)
+            if was is None or was <= 0:
+                continue
+            if now > was * REGRESSION_TOL:
+                file_bad.append(
+                    f"{name}:{field}: {now:.3f}s vs baseline "
+                    f"{was:.3f}s (+{(now / was - 1) * 100:.0f}%, "
+                    f"tolerance +{(REGRESSION_TOL - 1) * 100:.0f}%)")
+        if file_bad:
+            path.write_text(json.dumps(base, indent=2) + "\n")
+            file_bad.append(f"{name}: baseline restored (regressed result "
+                            "discarded)")
+        bad.extend(file_bad)
+    return bad
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
+    ap.add_argument("--no-regression-check", action="store_true",
+                    help="skip the >20%% BENCH_*.json wall-time guard")
     args = ap.parse_args()
 
     from benchmarks import (fig2_heuristics, fig3_dynamic, fig4_expansion,
@@ -41,6 +114,7 @@ def main() -> None:
         "roofline": lambda t: roofline.run(table=t),
     }
     selected = (args.only.split(",") if args.only else list(benches))
+    baselines = snapshot_baselines()
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in selected:
@@ -53,6 +127,14 @@ def main() -> None:
         except Exception as e:  # keep the suite going
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
     print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+    if not args.no_regression_check:
+        regressions = check_regressions(baselines)
+        if regressions:
+            print("\nBENCH REGRESSION (>20% over checked-in baseline):",
+                  file=sys.stderr)
+            for line in regressions:
+                print(f"  {line}", file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,12 @@ def main():
                             importance="uniform"),
         "RSQ": RSQConfig(bits=args.bits, group_size=32, rotate=True,
                          importance="attn_con", expansion=2),
+        # same recipe through the overlapped scheduler + streaming sharded
+        # Hessian accumulators: identical quality (the scheduler is
+        # bit-exact; sharding only reorders float sums), faster dispatch
+        "RSQ-ovl": RSQConfig(bits=args.bits, group_size=32, rotate=True,
+                             importance="attn_con", expansion=2,
+                             scheduler="overlapped", shard_hessians=2),
     }.items():
         res = quantize_and_eval(model, params, corpus, rsq)
         print(f"{name:7s} {args.bits}-bit: ppl={res['ppl']:.3f} "

@@ -5,6 +5,25 @@
 Trains nothing — uses a randomly initialized tiny model so it finishes in
 ~2 minutes; see examples/quantize_then_eval.py for the trained-model
 version whose perplexities are meaningful.
+
+Scaling knobs on ``RSQConfig`` (all orthogonal to the recipe itself):
+
+  * ``scheduler=`` — how the layer loop is dispatched.  ``"sequential"``
+    is the classic lock-step loop; ``"overlapped"`` software-pipelines
+    layer i's GPTQ solve with layer i+1's capture pass (bit-identical
+    output, faster wall-clock); ``None`` auto-picks (sequential on CPU,
+    overlapped on accelerators).
+  * ``shard_hessians=`` — ``False`` keeps dense per-weight (d, d) Hessian
+    accumulators; ``True`` shards them over the mesh's data axes (each
+    device accumulates only its local calibration shard, one psum at solve
+    time); an int S > 1 keeps S streaming partial-sum shards even without
+    a mesh.
+  * ``trace_cache=`` / ``use_gram_kernel=`` — per-meta jit reuse and the
+    Pallas gram kernel for the Hessian update (auto-on for TPU).
+
+The RSQ demo below runs with ``scheduler="overlapped"`` to exercise the
+pipelined dispatch path; the printed perplexities are identical to the
+sequential schedule by construction.
 """
 import dataclasses
 
@@ -36,7 +55,8 @@ def main():
         "QuaRot (rotation, uniform)  ": RSQConfig(bits=3, rotate=True,
                                                   importance="uniform"),
         "RSQ   (rotation + AttnCon)  ": RSQConfig(bits=3, rotate=True,
-                                                  importance="attn_con"),
+                                                  importance="attn_con",
+                                                  scheduler="overlapped"),
     }.items():
         qparams, report = quantize_model(model, params, calib, rsq,
                                          batch_size=8)

@@ -4,3 +4,10 @@ from repro.core.importance import STRATEGIES, get_strategy  # noqa: F401
 from repro.core.pipeline import RSQConfig, RSQPipeline, quantize_model  # noqa: F401
 from repro.core.quantizer import QuantSpec, quantize_weight_rtn  # noqa: F401
 from repro.core.rotation import random_hadamard, rotate_model  # noqa: F401
+from repro.core.scheduler import (  # noqa: F401
+    SCHEDULERS,
+    LayerScheduler,
+    OverlappedScheduler,
+    SequentialScheduler,
+    get_scheduler,
+)

@@ -2,19 +2,26 @@
 
 Two independent axes of parallelism, matching DESIGN.md §5:
 
-  * data-parallel Hessians — calibration tokens shard over the data axes;
-    the (d, d) weighted gram update is a contraction over the sharded token
-    dim, so GSPMD reduces it with one psum per batch.  H stays replicated
-    (it is consumed by a device-local Cholesky).
+  * data-parallel Hessians — calibration tokens shard over the data axes.
+    The classic mode keeps H replicated: the (d, d) weighted gram update is
+    a contraction over the sharded token dim, so GSPMD reduces it with one
+    psum per *batch*.  The streaming mode (``streaming=True``) instead
+    keeps the accumulator itself sharded — shape (S, d, d) with the shard
+    axis on the data axes, each device adding only its local partial gram —
+    and defers the cross-device reduction to a single solve-time
+    ``reduce`` (a ring all-reduce, ``runtime.collectives.ring_psum``).
+    Per-batch collective traffic drops to zero and no device ever holds an
+    unsharded per-layer Hessian during accumulation, which is what lets
+    calibration batches stream at pod scale.
 
-  * weight-parallel solves — GPTQ solves for different weights (all
+  * weight-parallel solves — GPTQ/LDLQ solves for different weights (all
     experts of a layer, or same-shaped weights across layers) are
-    independent: `gptq_quantize_batched` vmaps the blocked solver so one
-    pjit call distributes the batch over the model axis.  This is the
-    solver the calibration engine's shape-grouped solves dispatch to
-    (see pipeline.quantize_layer_weights): q/k/v-style same-shape weights
-    and stacked (E, d_in, d_out) expert tensors arrive pre-stacked along
-    the leading axis.
+    independent: ``gptq_quantize_batched`` / ``ldlq_quantize_batched`` vmap
+    the blocked solvers so one pjit call distributes the batch over the
+    model axis.  These are the solvers the calibration engine's
+    shape-grouped solves dispatch to (see pipeline.quantize_layer_weights):
+    q/k/v-style same-shape weights and stacked (E, d_in, d_out) expert
+    tensors arrive pre-stacked along the leading axis.
 """
 from __future__ import annotations
 
@@ -22,27 +29,95 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.4.35
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.core import hessian as hess
 from repro.core.gptq import gptq_quantize
+from repro.core.ldlq import ldlq_quantize
 from repro.core.quantizer import QuantSpec
+from repro.runtime.collectives import ring_psum
 from repro.runtime.sharding import ParallelCtx
 
 
-def make_sharded_hessian_fn(ctx: ParallelCtx):
-    """Returns jitted f(h, x, r) -> h + 2 XᵀR²X with X token-sharded."""
+def make_sharded_hessian_fn(ctx: ParallelCtx, *, streaming: bool = False,
+                            n_shards: int | None = None):
+    """Sharded Hessian accumulation over ``ctx``'s data axes.
 
-    def acc(h, x, r):
+    ``streaming=False`` (classic): returns jitted ``f(h, x, r) -> h`` with X
+    token-sharded and H replicated (one psum per batch).
+
+    ``streaming=True``: returns ``(acc, reduce)``.  ``acc(h, x, r)``
+    maintains a *sharded* (S, d, d) partial-sum accumulator (S = data-axis
+    size unless ``n_shards`` overrides it; pass ``h=None`` to start) with no
+    per-batch collectives; ``reduce(h) -> (d, d)`` performs the one
+    solve-time reduction — a ring all-reduce over the data axis when the
+    mesh is live, a plain shard-sum otherwise.
+    """
+
+    def acc_dense(h, x, r):
         xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
         xf = xf * r.reshape(-1, 1)
         upd = 2.0 * xf.T @ xf
         return (h + upd if h is not None else upd)
 
-    if not ctx.enabled:
-        return jax.jit(acc)
-    x_sh = ctx.sharding("dp", None, None)
-    h_sh = ctx.sharding(None, None)
-    r_sh = ctx.sharding("dp", None)
-    return jax.jit(acc, in_shardings=(h_sh, x_sh, r_sh), out_shardings=h_sh)
+    if not streaming:
+        if not ctx.enabled:
+            return jax.jit(acc_dense)
+        x_sh = ctx.sharding("dp", None, None)
+        h_sh = ctx.sharding(None, None)
+        r_sh = ctx.sharding("dp", None)
+        return jax.jit(acc_dense, in_shardings=(h_sh, x_sh, r_sh),
+                       out_shardings=h_sh)
+
+    s = n_shards or (max(ctx.axis_size("dp"), 1) if ctx.enabled else 1)
+    s = max(s, 1)
+
+    def acc_stream(h, x, r):
+        upd = hess.accumulate(None, x.reshape(-1, x.shape[-1]),
+                              None if r is None else r.reshape(-1),
+                              n_shards=s)
+        out = upd if h is None else h + upd
+        return ctx.shard_leading(out)
+
+    acc = jax.jit(acc_stream)
+
+    if ctx.enabled and ctx.dp and ctx.axis_size("dp") > 1:
+        axes = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+
+        def local_reduce(hs):
+            # local shard-sum then ONE exact all-reduce over the data
+            # axis — the only collective of the whole accumulation stream.
+            # Single data axis: bandwidth-optimal ring, chunked over the
+            # leading rows of the summed (d, d) / (E, d, d) partial;
+            # multi-axis (pod x data) meshes: a plain psum over both.
+            part = jnp.sum(hs, axis=0)
+            if isinstance(axes, str):
+                return ring_psum(part, axes)
+            return jax.lax.psum(part, axes)
+
+        def reduce_fn(h):
+            spec = P(axes, *([None] * (h.ndim - 1)))
+            out = P(*([None] * (h.ndim - 1)))
+            # replication checking is off: chunks of the ring all-reduce are
+            # each finalized on one owner device, so the output is
+            # numerically identical everywhere but not provably "replicated"
+            # to the tracer (kwarg name varies across jax versions)
+            for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+                try:
+                    f = _shard_map(local_reduce, mesh=ctx.mesh,
+                                   in_specs=(spec,), out_specs=out, **kw)
+                    break
+                except TypeError:
+                    continue
+            return f(h)
+
+        return acc, jax.jit(reduce_fn)
+    return acc, jax.jit(hess.reduce_shards)
 
 
 @partial(jax.jit, static_argnames=("spec", "block"))
@@ -51,4 +126,13 @@ def gptq_quantize_batched(ws: jax.Array, hs: jax.Array, spec: QuantSpec,
     """ws: (N, d_in, d_out); hs: (N, d_in, d_in) — batched independent
     solves (vmapped; under pjit the N axis shards over the model axis)."""
     fn = lambda w, h: gptq_quantize(w, h, spec, damp=damp, block=block)
+    return jax.vmap(fn)(ws, hs)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def ldlq_quantize_batched(ws: jax.Array, hs: jax.Array, *,
+                          damp: float = 0.01, block: int = 128):
+    """LDLQ/E8 twin of ``gptq_quantize_batched``: one vmapped program for a
+    (N, d_in, d_out) weight stack instead of a per-expert Python loop."""
+    fn = lambda w, h: ldlq_quantize(w, h, damp=damp, block=block)
     return jax.vmap(fn)(ws, hs)

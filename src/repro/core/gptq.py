@@ -38,6 +38,39 @@ def prepare_hessian(h: jax.Array, damp: float = 0.01) -> jax.Array:
     return hf
 
 
+def _inv_upper(u: jax.Array, block: int = 64) -> jax.Array:
+    """Batch-invariant inverse of an upper-triangular matrix.
+
+    Recursive 2x2 block back-substitution: diagonal blocks <= ``block``
+    invert by masked row back-substitution, off-diagonal blocks combine as
+    -A⁻¹·C·D⁻¹.  Everything is matmuls + elementwise ops, which XLA rounds
+    identically whether the program is vmapped or not — unlike the library
+    ``solve_triangular`` (trsm), whose batched CPU path accumulates in a
+    different order than the single-matrix call and seeds the ulp-level
+    drift that flips GPTQ codes at 2-bit/small-group settings (the vmap
+    parity regression in tests/test_pipeline_perf.py)."""
+    d = u.shape[-1]
+    if d <= block:
+        eye = jnp.eye(d, dtype=u.dtype)
+
+        def body(k, v):
+            i = d - 1 - k
+            ui = jax.lax.dynamic_slice_in_dim(u, i, 1, 0)[0]
+            e_i = jax.lax.dynamic_slice_in_dim(eye, i, 1, 0)[0]
+            uii = jax.lax.dynamic_slice(u, (i, i), (1, 1))[0, 0]
+            row = (e_i - ui @ v) / uii
+            return jax.lax.dynamic_update_slice_in_dim(v, row[None], i, 0)
+
+        return jax.lax.fori_loop(0, d, body, jnp.zeros_like(u))
+    m = d // 2
+    a, c, dd = u[:m, :m], u[:m, m:], u[m:, m:]
+    ai, di = _inv_upper(a, block), _inv_upper(dd, block)
+    tr = -(ai @ c) @ di
+    top = jnp.concatenate([ai, tr], axis=1)
+    bot = jnp.concatenate([jnp.zeros((d - m, m), u.dtype), di], axis=1)
+    return jnp.concatenate([top, bot], axis=0)
+
+
 def hinv_cholesky(h: jax.Array) -> jax.Array:
     """Upper-triangular U with H^-1 = U^T U.
 
@@ -46,11 +79,16 @@ def hinv_cholesky(h: jax.Array) -> jax.Array:
     H^-1 = Ũ^-T Ũ^-1, i.e. U = Ũ^-1.  One Cholesky + one triangular inverse
     — versus the naive Cholesky → full inverse → re-Cholesky chain, this
     halves the O(d^3) setup work per solve.  U equals the upper Cholesky
-    factor of H^-1 (unique for a positive diagonal) up to rounding."""
+    factor of H^-1 (unique for a positive diagonal) up to rounding.
+
+    The triangular inverse uses the batch-invariant blocked form
+    (``_inv_upper``) so batched (vmapped) and sequential solves produce
+    bit-identical U — a precondition for exact batched-vs-sequential code
+    parity (Cholesky itself is already batch-invariant on all backends we
+    run)."""
     lr = jnp.linalg.cholesky(h[::-1, ::-1])
     ut = lr[::-1, ::-1]  # upper, H = ut @ ut.T
-    eye = jnp.eye(h.shape[0], dtype=h.dtype)
-    return jax.scipy.linalg.solve_triangular(ut, eye, lower=False)
+    return _inv_upper(ut)
 
 
 @partial(jax.jit, static_argnames=("spec", "block"))

@@ -13,7 +13,7 @@ rotation + uniform; RSQ = rotation + a token-importance strategy.
 
 Calibration engine
 ------------------
-The hot path is a single fused, trace-cached pass:
+The hot path is a scheduled stack of fused, trace-cached per-layer stages:
 
   * **Per-meta jit cache** — capture/apply closures are built and jitted
     once per distinct ``(BlockMeta, param-shape)`` signature, not once per
@@ -25,41 +25,57 @@ The hot path is a single fused, trace-cached pass:
   * **Fused calibration step** — capture, token importance, and Hessian
     accumulation run as ONE jitted program per batch with the Hessian dict
     donated (``donate_argnums``), so the O(d^2)-per-weight accumulator
-    state is updated in place instead of round-tripping through fresh
-    buffers.  Dense and stacked-expert updates both route through
-    ``hess.accumulate``, which dispatches the Pallas ``gram`` kernel when
-    ``use_gram_kernel`` resolves on (auto-on for the TPU backend).
-  * **Batched solves** — GPTQ solves are shape-grouped: weights sharing
-    ``(d_in, d_out)`` (q/k/v, gate/up) stack into one vmapped
-    ``gptq_quantize_batched`` call and stacked experts go through the
-    batched path directly, instead of a sequential Python loop.
-
-Scale notes: calibration batches stream through jitted capture functions;
-Hessian accumulation is O(d^2) state per weight (one layer's worth at a
-time).  The distributed variants (data-parallel Hessians, weight-parallel
-solves) live in core/distributed.
+    state is updated in place.  Dense and stacked-expert updates both route
+    through ``hess.accumulate`` (Pallas ``gram`` kernel auto-on for TPU).
+  * **Layer scheduler** — the layer loop itself is pluggable
+    (``core/scheduler``): the pipeline exposes its per-layer stages as
+    engine hooks (``layer_begin`` / ``layer_capture`` / ``layer_solve`` /
+    ``layer_apply`` / ``layer_finalize``) and ``RSQConfig.scheduler``
+    selects who drives them.  ``SequentialScheduler`` is the classic
+    lock-step loop; ``OverlappedScheduler`` software-pipelines dispatch so
+    layer i's GPTQ/LDLQ solve executes while layer i+1's fused capture is
+    already being issued over double-buffered activations, with every host
+    sync (error-report floats) deferred to one drain — bit-identical
+    results, no per-layer pipeline bubble.  Because capture/apply are
+    trace-cached per meta, the overlapped schedule adds zero compilations.
+  * **Streamed sharded Hessians** — ``RSQConfig.shard_hessians`` switches
+    the accumulators to the streaming layout: (S, d, d) partial sums with
+    the shard axis on the mesh's data axes (``ParallelCtx.shard_leading``),
+    so each device accumulates only its local token chunk and no device
+    ever materializes an unsharded per-layer Hessian during accumulation;
+    ``hess.reduce_shards`` performs the single solve-time reduction (one
+    psum under GSPMD; the standalone streaming API with an explicit ring
+    all-reduce lives in ``core/distributed.make_sharded_hessian_fn``).
+  * **Batched solves** — GPTQ *and* LDLQ solves are shape-grouped: weights
+    sharing ``(d_in, d_out)`` (q/k/v, gate/up) stack into one vmapped
+    ``gptq_quantize_batched`` / ``ldlq_quantize_batched`` call and stacked
+    experts go through the batched path directly, instead of a sequential
+    Python loop.  Solve error reports are built lazily (jax scalars) so
+    schedulers decide when the host pays the sync.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import hessian as hess
-from repro.core.distributed import gptq_quantize_batched
+from repro.core.distributed import gptq_quantize_batched, ldlq_quantize_batched
 from repro.core.expansion import expand_dataset
 from repro.core.gptq import gptq_quantize
 from repro.core.importance import ImportanceInputs, get_strategy
 from repro.core.ldlq import ldlq_quantize
 from repro.core.quantizer import QuantSpec
 from repro.core.rotation import rotate_model
+from repro.core.scheduler import get_scheduler, resolve_hessian_shards
 from repro.models.layers import rms_norm
 from repro.models.lm import Model, apply_block, capture_block
+from repro.runtime.sharding import LOCAL, ParallelCtx
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +101,13 @@ class RSQConfig:
     # per-meta jit cache for capture/apply (False: legacy per-layer jits,
     # kept as the benchmark baseline)
     trace_cache: bool = True
+    # layer scheduler: "sequential" | "overlapped" | None (auto: sequential
+    # on CPU, overlapped on accelerators) — see core/scheduler
+    scheduler: Optional[str] = None
+    # streaming sharded Hessian accumulators: False = dense (d, d) dicts;
+    # True = shard over the mesh's data axes (S = dp size); int S > 1 = S
+    # partial-sum shards regardless of mesh — see hessian.accumulate
+    shard_hessians: Any = False
 
     def spec(self) -> QuantSpec:
         return QuantSpec(bits=self.bits, group_size=self.group_size,
@@ -129,15 +152,29 @@ def _solve_spec(rsq: RSQConfig, d_in: int) -> tuple[QuantSpec, int]:
     return spec, block
 
 
+def finalize_layer_report(report: dict) -> dict:
+    """Materialize a deferred solve report (jax scalars -> floats).
+
+    This is the host sync of the solve stage; schedulers choose when to pay
+    it (per layer for sequential, once at the drain for overlapped)."""
+    return {path: float(v) for path, v in report.items()}
+
+
 def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
-                           rsq: RSQConfig) -> tuple[dict, dict]:
+                           rsq: RSQConfig, *,
+                           defer: bool = False) -> tuple[dict, dict]:
     """Solve GPTQ/LDLQ for every captured weight of one block.
 
-    GPTQ solves are shape-grouped: all weights sharing ``(d_in, d_out)``
-    (q/k/v, gate/up, every expert of a stacked (E, d_in, d_out) tensor)
-    are stacked into a single ``gptq_quantize_batched`` call — one vmapped
-    program per distinct shape instead of one dispatch per weight."""
-    report = {}
+    Solves are shape-grouped for both methods: all weights sharing
+    ``(d_in, d_out)`` (q/k/v, gate/up, every expert of a stacked
+    (E, d_in, d_out) tensor) are stacked into a single
+    ``gptq_quantize_batched`` / ``ldlq_quantize_batched`` call — one
+    vmapped program per distinct shape instead of one dispatch per weight.
+
+    ``defer=True`` leaves the per-weight error report as jax scalars (no
+    host sync); call :func:`finalize_layer_report` to materialize floats.
+    """
+    report: dict[str, Any] = {}
     new_p = jax.tree.map(lambda x: x, p_block)
 
     items = []  # (path, node, name, w, h) for every quantizable weight
@@ -152,55 +189,49 @@ def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
             continue
         items.append((path, node, name, w, h))
 
-    if rsq.method == "ldlq":
-        def solve(w, h):
-            block = min(rsq.gptq_block, w.shape[0])
-            out = ldlq_quantize(w, h, damp=rsq.damp, block=block)
-            return out["w_deq"], float(out["err"])
+    use_ldlq = rsq.method == "ldlq"
 
-        for path, node, name, w, h in items:
-            if w.ndim == 3:  # stacked experts
-                outs = [solve(w[e], h[e]) for e in range(w.shape[0])]
-                node[name] = jnp.stack([o[0] for o in outs]).astype(w.dtype)
-                report[path] = float(np.mean([o[1] for o in outs]))
-            else:
-                deq, err = solve(w, h)
-                node[name] = deq.astype(w.dtype)
-                report[path] = err
-        return new_p, report
-
-    # ---- GPTQ: group by (d_in, d_out); one batched solve per group
+    # ---- group by (d_in, d_out); one batched solve per group
     groups: dict[tuple, list] = {}
     for it in items:
         groups.setdefault(tuple(it[3].shape[-2:]), []).append(it)
     for (d_in, d_out), its in groups.items():
-        spec, block = _solve_spec(rsq, d_in)
+        if use_ldlq:
+            spec, block = None, min(rsq.gptq_block, d_in)
+        else:
+            spec, block = _solve_spec(rsq, d_in)
         n_solves = sum(1 if it[3].ndim == 2 else it[3].shape[0] for it in its)
         if n_solves == 1 and its[0][3].ndim == 2:  # lone 2-D weight: no
             # batch dim to vmap over (a lone (1, d_in, d_out) expert stack
             # stays on the batched path — it already carries the lead axis)
             path, node, name, w, h = its[0]
-            out = gptq_quantize(w, h, spec, damp=rsq.damp, block=block)
+            out = (ldlq_quantize(w, h, damp=rsq.damp, block=block)
+                   if use_ldlq else
+                   gptq_quantize(w, h, spec, damp=rsq.damp, block=block))
             node[name] = out["w_deq"].astype(w.dtype)
-            report[path] = float(out["err"])
+            report[path] = out["err"]
             continue
         ws = jnp.concatenate(
             [it[3][None] if it[3].ndim == 2 else it[3] for it in its])
         hs = jnp.concatenate(
             [it[4][None] if it[4].ndim == 2 else it[4] for it in its])
-        out = gptq_quantize_batched(ws, hs, spec, damp=rsq.damp, block=block)
-        errs = np.asarray(out["err"])
+        out = (ldlq_quantize_batched(ws, hs, damp=rsq.damp, block=block)
+               if use_ldlq else
+               gptq_quantize_batched(ws, hs, spec, damp=rsq.damp,
+                                     block=block))
         o = 0
         for path, node, name, w, h in its:
             if w.ndim == 2:
                 node[name] = out["w_deq"][o].astype(w.dtype)
-                report[path] = float(errs[o])
+                report[path] = out["err"][o]
                 o += 1
             else:
                 e = w.shape[0]
                 node[name] = out["w_deq"][o : o + e].astype(w.dtype)
-                report[path] = float(errs[o : o + e].mean())
+                report[path] = out["err"][o : o + e].mean()
                 o += e
+    if not defer:
+        report = finalize_layer_report(report)
     return new_p, report
 
 
@@ -214,20 +245,45 @@ class _LayerFns:
     hess_init: Callable  # () -> {path: zeros}
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerTask:
+    """One unit of scheduler work: quantize one block (original params)."""
+    tag: str
+    p_blk: Any
+    meta: Any
+
+
+@dataclasses.dataclass
+class _RunCtx:
+    """Per-run state shared by all engine hooks of one ``run`` call."""
+    calib: Any
+    counts: Any
+    batch_size: int
+    media_b: Any
+    verbose: bool
+
+
 class RSQPipeline:
-    def __init__(self, model: Model, rsq: RSQConfig):
+    def __init__(self, model: Model, rsq: RSQConfig,
+                 ctx: ParallelCtx = LOCAL):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.rsq = rsq
+        self.ctx = ctx
         self.strategy = get_strategy(rsq.importance)
         self.skw = _strategy_kwargs(rsq)
         self.use_kernel = (rsq.use_gram_kernel
                            if rsq.use_gram_kernel is not None
                            else jax.default_backend() == "tpu")
+        self.n_hshards = resolve_hessian_shards(rsq.shard_hessians, ctx)
         self._layer_fns: dict[Any, _LayerFns] = {}
+        self._prewarm: dict[Any, Any] = {}  # layer key -> compile future
+        self._rc: Optional[_RunCtx] = None
         # retraces of the cached capture/apply programs; a homogeneous
-        # L-layer stack should end a run at 1/1, not L/L
+        # L-layer stack should end a run at 1/1, not L/L.  The lock keeps
+        # the counts exact when prewarm traces programs on worker threads.
         self.trace_counts = {"capture": 0, "apply": 0}
+        self._trace_lock = threading.Lock()
 
     # ---------------------------------------------------------------- utils
     def _importance(self, z_in, z_out, tokens, colsum, counts):
@@ -237,7 +293,10 @@ class RSQPipeline:
         return _chunk_mask(r, self.rsq)
 
     def _accumulate(self, hessians, caps, dom, r):
-        """Add one batch's contribution to every weight Hessian."""
+        """Add one batch's contribution to every weight Hessian.
+
+        With ``shard_hessians`` on, accumulators carry a leading (S,) shard
+        axis constrained to the mesh's data axes — updates stay local."""
         slot_token = caps.get("ffn/__moe_slot_token")
         for path, x_c in caps.items():
             if path.endswith("__moe_slot_token"):
@@ -252,8 +311,12 @@ class RSQPipeline:
                 r_rows = rf[slot_token].reshape(x_c.shape[0], x_c.shape[1])
             if not (x_c.ndim == 3 and d == "expert"):
                 x_c = x_c.reshape(-1, x_c.shape[-1])
-            hessians[path] = hess.accumulate(
-                hessians.get(path), x_c, r_rows, use_kernel=self.use_kernel)
+            h_new = hess.accumulate(
+                hessians.get(path), x_c, r_rows, use_kernel=self.use_kernel,
+                n_shards=self.n_hshards)
+            if self.n_hshards > 1:
+                h_new = self.ctx.shard_leading(h_new)
+            hessians[path] = h_new
         return hessians
 
     def _layer_key(self, meta, p_blk):
@@ -280,28 +343,35 @@ class RSQPipeline:
 
         caps_s = jax.eval_shape(_probe, p_blk, x, med)
         hshapes = {}
+        shard = (self.n_hshards,) if self.n_hshards > 1 else ()
         for path, s in caps_s.items():
             if path.endswith("__moe_slot_token"):
                 continue
             if s.ndim == 3 and dom[path] == "expert":
-                hshapes[path] = (s.shape[0], s.shape[-1], s.shape[-1])
+                hshapes[path] = shard + (s.shape[0], s.shape[-1], s.shape[-1])
             else:
-                hshapes[path] = (s.shape[-1], s.shape[-1])
+                hshapes[path] = shard + (s.shape[-1], s.shape[-1])
 
         def hess_init():
-            return {p_: jnp.zeros(sh, jnp.float32)
-                    for p_, sh in hshapes.items()}
+            zeros = {p_: jnp.zeros(sh, jnp.float32)
+                     for p_, sh in hshapes.items()}
+            if self.n_hshards > 1:
+                zeros = {p_: self.ctx.shard_leading(z)
+                         for p_, z in zeros.items()}
+            return zeros
 
         def _fused(p, x, med, tok, counts, hessians):
             # python side effect at trace time: counts XLA compilations
-            self.trace_counts["capture"] += 1
+            with self._trace_lock:
+                self.trace_counts["capture"] += 1
             y, caps, dom_t, colsum = capture_block(p, cfg, meta_, x,
                                                    media=med)
             r = self._importance(x, y, tok, colsum, counts)
             return self._accumulate(hessians, caps, dom_t, r)
 
         def _apply(p, x, med):
-            self.trace_counts["apply"] += 1
+            with self._trace_lock:
+                self.trace_counts["apply"] += 1
             return apply_block(p, cfg, meta_, x, media=med)[0]
 
         fns = _LayerFns(fused=jax.jit(_fused, donate_argnums=(5,)),
@@ -309,6 +379,120 @@ class RSQPipeline:
         if self.rsq.trace_cache:
             self._layer_fns[key] = fns
         return fns
+
+    # ----------------------------------------------- scheduler engine hooks
+    # A LayerScheduler (core/scheduler) drives these five stages.  All of
+    # them only *dispatch* device work; the lone host sync lives in
+    # layer_sync/layer_finalize, which is why the overlapped scheduler can
+    # defer it.
+
+    def prewarm(self, tasks, acts) -> None:
+        """Compile every distinct layer program concurrently.
+
+        On a heterogeneous stack (K distinct metas — hybrid attn/mamba
+        models, prefix + group stacks) the lock-step schedule pays the K
+        XLA compilations serially, one at each first encounter.  This
+        builds + compiles all of them on a thread pool up front (tracing
+        contends on the GIL but the multi-second XLA compile releases it),
+        so cold calibration wall-clock drops from ~sum(compiles) to
+        ~max(compiles).  Shape-matched dummy executions force the
+        compilation into the jit call cache; real calls then hit it.
+        No-op for homogeneous stacks and with ``trace_cache=False``."""
+        if not self.rsq.trace_cache:
+            return
+        rc = self._rc
+        med0 = rc.media_b[0] if rc.media_b is not None else None
+        jobs, seen = [], set()
+        for task in tasks:
+            key = self._layer_key(task.meta, task.p_blk)
+            if key in self._layer_fns or key in seen:
+                continue
+            seen.add(key)
+            jobs.append((key, task))
+        if len(jobs) < 2:  # single meta: nothing to overlap
+            return
+        import concurrent.futures as cf
+        import os
+
+        x0 = acts[0]
+        tok0 = rc.calib[: x0.shape[0]]
+
+        def build(task):
+            fns = self._get_layer_fns(task.meta, task.p_blk, x0, med0)
+            # dummy one-batch executions: compile capture AND apply now
+            # (values discarded; the donated dict is a throwaway).  A real
+            # call is required — on this jax, AOT lower().compile() does
+            # NOT populate the jit call cache, so the later real call
+            # would recompile from scratch
+            fns.fused(task.p_blk, x0, med0, tok0, rc.counts,
+                      fns.hess_init())
+            fns.apply(task.p_blk, x0, med0)
+            return fns
+
+        ex = cf.ThreadPoolExecutor(
+            max_workers=min(len(jobs), os.cpu_count() or 4))
+        self._prewarm = {key: ex.submit(build, task) for key, task in jobs}
+        ex.shutdown(wait=False)
+
+    def layer_begin(self, task: LayerTask, acts) -> dict:
+        """Resolve the trace-cached programs and fresh accumulators."""
+        rc = self._rc
+        med0 = rc.media_b[0] if rc.media_b is not None else None
+        fut = self._prewarm.pop(self._layer_key(task.meta, task.p_blk), None)
+        if fut is not None:
+            fut.result()  # join the background compile; fns now cached
+        fns = self._get_layer_fns(task.meta, task.p_blk, acts[0], med0)
+        return {"task": task, "fns": fns, "hessians": fns.hess_init(),
+                "t0": time.perf_counter(), "pending": None}
+
+    def layer_capture(self, state: dict, bi: int, x_b) -> None:
+        """Fused capture+importance+accumulate for one calibration batch
+        (the Hessian dict is donated, so state updates in place)."""
+        rc = self._rc
+        med = rc.media_b[bi] if rc.media_b is not None else None
+        tok = rc.calib[bi * rc.batch_size : bi * rc.batch_size + x_b.shape[0]]
+        state["hessians"] = state["fns"].fused(
+            state["task"].p_blk, x_b, med, tok, rc.counts, state["hessians"])
+
+    def layer_solve(self, state: dict):
+        """Reduce Hessian shards (single psum) and dispatch the batched
+        GPTQ/LDLQ solves.  Returns the quantized block params; the error
+        report stays deferred in ``state`` (no host sync here)."""
+        hessians = state.pop("hessians")
+        if self.n_hshards > 1:
+            hessians = {p: hess.reduce_shards(h)
+                        for p, h in hessians.items()}
+        p_new, state["pending"] = quantize_layer_weights(
+            state["task"].p_blk, hessians, self.rsq, defer=True)
+        return p_new
+
+    def layer_apply(self, state: dict, p_new, bi: int, x_b):
+        """Propagate one batch through the quantized block."""
+        rc = self._rc
+        med = rc.media_b[bi] if rc.media_b is not None else None
+        return state["fns"].apply(p_new, x_b, med)
+
+    def layer_sync(self, state: dict) -> None:
+        """Materialize the deferred error report now (host sync;
+        idempotent).  The sequential scheduler calls this right after the
+        solve — the classic lock-step timeline; the overlapped scheduler
+        skips it and pays one drain at the end of the stack instead."""
+        if not state.get("synced"):
+            state["pending"] = finalize_layer_report(state["pending"])
+            state["synced"] = True
+
+    def layer_finalize(self, state: dict) -> dict:
+        """Assemble the layer report (syncing if not already done).  Under
+        the overlapped scheduler ``seconds`` spans dispatch-to-drain and
+        overlaps across layers — the stack total is the meaningful time."""
+        rc = self._rc
+        self.layer_sync(state)
+        rep = {"weights": state["pending"],
+               "seconds": round(time.perf_counter() - state["t0"], 4)}
+        if rc.verbose:
+            print(f"  [{state['task'].tag}] {len(rep['weights'])} weights "
+                  f"quantized in {rep['seconds']}s", flush=True)
+        return rep
 
     # ----------------------------------------------------------------- main
     def run(self, params: dict, calib_tokens, *, batch_size: int = 8,
@@ -322,6 +506,8 @@ class RSQPipeline:
         # same pipeline legitimately contribute 0 traces to this run)
         self.trace_counts.update(capture=0, apply=0)
         report: dict[str, Any] = {"layers": {}, "rsq": dataclasses.asdict(rsq)}
+        scheduler = get_scheduler(rsq.scheduler)
+        report["scheduler"] = scheduler.name
 
         calib = expand_dataset(jnp.asarray(calib_tokens), rsq.expansion)
         counts = jnp.bincount(calib.reshape(-1),
@@ -350,6 +536,8 @@ class RSQPipeline:
         media_b = None
         if media is not None:
             media_b = [media[i : i + batch_size] for i in range(0, n, batch_size)]
+        self._rc = _RunCtx(calib=calib, counts=counts, batch_size=batch_size,
+                           media_b=media_b, verbose=verbose)
 
         # ---------- encoder stack (enc-dec models) then decoder stack
         if cfg.family == "encdec":
@@ -359,19 +547,26 @@ class RSQPipeline:
                 frames = frames @ params["frame_proj"].astype(frames.dtype)
             enc_acts = [frames[i : i + batch_size]
                         for i in range(0, n, batch_size)]
-            for li in range(cfg.n_encoder_layers):
-                p_blk = jax.tree.map(lambda a: a[li],
-                                     params["encoder"]["groups"])["b0"]
-                p_new, enc_acts, rep = self._quantize_one_layer(
-                    p_blk, model.enc_metas[0], enc_acts, None, calib,
-                    batch_size, counts, verbose, tag=f"enc{li}")
+            self._rc.media_b = None  # encoder blocks take no media input
+            enc_tasks = [
+                LayerTask(tag=f"enc{li}",
+                          p_blk=jax.tree.map(lambda a, li=li: a[li],
+                                             params["encoder"]["groups"])["b0"],
+                          meta=model.enc_metas[0])
+                for li in range(cfg.n_encoder_layers)]
+            # the encoder's final activations feed the decoder as media, so
+            # the last encoder layer must still propagate
+            enc_acts, enc_outs = scheduler.run(self, enc_tasks, enc_acts,
+                                               propagate_last=True)
+            for li, (p_new, rep) in enumerate(enc_outs):
                 report["layers"][f"enc{li}"] = rep
                 new_params["encoder"]["groups"] = jax.tree.map(
-                    lambda full, nw: full.at[li].set(nw),
+                    lambda full, nw, li=li: full.at[li].set(nw),
                     new_params["encoder"]["groups"], {"b0": p_new})
             enc_acts = [rms_norm(a, params["encoder"]["final_norm"],
                                  cfg.norm_eps) for a in enc_acts]
             media_b = enc_acts
+            self._rc.media_b = media_b
 
         # ---------- decoder prefix + groups
         def layer_params(li):
@@ -383,12 +578,16 @@ class RSQPipeline:
             return blk, model.group_metas[o], ("groups", g, o)
 
         n_layers = len(model.prefix_metas) + model.n_groups * model.period
+        tasks, locs = [], []
         for li in range(n_layers):
             p_blk, meta, loc = layer_params(li)
-            p_new, acts, rep = self._quantize_one_layer(
-                p_blk, meta, acts, media_b, calib, batch_size, counts,
-                verbose, tag=f"layer{li}")
-            report["layers"][f"layer{li}"] = rep
+            tasks.append(LayerTask(tag=f"layer{li}", p_blk=p_blk, meta=meta))
+            locs.append(loc)
+        # nothing consumes the last decoder layer's outputs — skip its
+        # apply pass (one full batch sweep of dispatched-and-discarded work)
+        acts, outs = scheduler.run(self, tasks, acts, propagate_last=False)
+        for task, loc, (p_new, rep) in zip(tasks, locs, outs):
+            report["layers"][task.tag] = rep
             if loc[0] == "prefix":
                 new_params["prefix"][loc[1]] = p_new
             else:
@@ -402,39 +601,13 @@ class RSQPipeline:
                     set_at, stacked[f"b{o}"], p_new)
                 new_params["groups"] = stacked
 
+        self._rc = None
         report["rotations"] = {k: (None if v is None else "set")
                                for k, v in rotations.items()}
         report["trace_counts"] = dict(self.trace_counts)
         return new_params, report
 
-    def _quantize_one_layer(self, p_blk, meta, acts, media_b, calib,
-                            batch_size, counts, verbose, tag=""):
-        rsq = self.rsq
-        t0 = time.perf_counter()
-        fns = self._get_layer_fns(
-            meta, p_blk, acts[0], media_b[0] if media_b is not None else None)
-        # fused capture+importance+accumulate per batch; the Hessian dict is
-        # donated, so the accumulator state updates in place
-        hessians = fns.hess_init()
-        for bi, x_b in enumerate(acts):
-            med = media_b[bi] if media_b is not None else None
-            tok = calib[bi * batch_size : bi * batch_size + x_b.shape[0]]
-            hessians = fns.fused(p_blk, x_b, med, tok, counts, hessians)
-        p_new, rep = quantize_layer_weights(p_blk, hessians, rsq)
-        # propagate quantized outputs
-        new_acts = [fns.apply(p_new, x_b,
-                              media_b[bi] if media_b is not None else None)
-                    for bi, x_b in enumerate(acts)]
-        # 4 decimals: warm trace-cached layers run in the 10 ms range, and
-        # BENCH_pipeline.json regresses against these values
-        rep = {"weights": rep,
-               "seconds": round(time.perf_counter() - t0, 4)}
-        if verbose:
-            print(f"  [{tag}] {len(rep['weights'])} weights quantized "
-                  f"in {rep['seconds']}s", flush=True)
-        return p_new, new_acts, rep
-
 
 def quantize_model(model: Model, params: dict, calib_tokens,
-                   rsq: RSQConfig, **kw):
-    return RSQPipeline(model, rsq).run(params, calib_tokens, **kw)
+                   rsq: RSQConfig, *, ctx: ParallelCtx = LOCAL, **kw):
+    return RSQPipeline(model, rsq, ctx=ctx).run(params, calib_tokens, **kw)

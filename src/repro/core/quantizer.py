@@ -30,12 +30,23 @@ class QuantSpec:
 
 
 def find_params(w_group: jax.Array, spec: QuantSpec):
-    """w_group: (gs, d_out) -> (scale, zero) each (d_out,)."""
+    """w_group: (gs, d_out) -> (scale, zero) each (d_out,).
+
+    The group-param computation is kept fused-multiply-free: every sym
+    scale is produced by a *single* rounded floating op on ``amax`` (one
+    division by an exactly-representable python constant), never a mul+div
+    chain XLA could contract or reassociate.  Together with the
+    batch-invariant triangular inverse in ``gptq._inv_upper`` (the actual
+    seed of the historic vmap drift) this pins batched solves to
+    bit-identical codes vs the sequential solver at 2-bit/small-group
+    settings; tests/test_pipeline_perf.py regresses the parity."""
     wf = w_group.astype(jnp.float32)
     maxq = spec.maxq
     if spec.sym:
         amax = jnp.max(jnp.abs(wf), axis=0)
-        scale = jnp.maximum(2.0 * amax / maxq, 1e-9)
+        # maxq/2 = (2^bits - 1)/2 is exact in fp32, so this is one
+        # correctly-rounded division (vs two rounded ops for 2*amax/maxq)
+        scale = jnp.maximum(amax / (maxq * 0.5), 1e-9)
         zero = jnp.full_like(scale, (maxq + 1) // 2)
     else:
         lo = jnp.minimum(jnp.min(wf, axis=0), 0.0)

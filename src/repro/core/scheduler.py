@@ -1,0 +1,192 @@
+"""Layer schedulers for the RSQ calibration loop.
+
+The per-layer recipe (capture -> solve -> apply) has a strict data
+dependency — layer i+1's calibration inputs are layer i's *quantized*
+outputs (GPTQ error feedback) — but the *dispatch* of that chain does not
+have to be lock-step.  The pipeline exposes its per-layer stages as engine
+hooks (``prewarm`` / ``layer_begin`` / ``layer_capture`` / ``layer_solve``
+/ ``layer_sync`` / ``layer_apply`` / ``layer_finalize``, see
+``RSQPipeline``) and a scheduler decides the order in which they are
+issued:
+
+``SequentialScheduler``
+    The classic loop: capture every batch, solve, materialize the per-weight
+    error report (a host sync), apply every batch, move on.  One full
+    host<->device round-trip per layer.  Default on CPU.
+
+``OverlappedScheduler``
+    Software-pipelined dispatch.  All distinct layer programs of the stack
+    compile concurrently up front (``engine.prewarm`` — the cold-start win
+    on heterogeneous stacks).  Then layer i's GPTQ/LDLQ solve is
+    *dispatched* (never synced) and, relying on async dispatch, layer i's
+    apply and layer i+1's fused capture are interleaved batch-by-batch over
+    double-buffered activation lists (buffer A holds layer i inputs, buffer
+    B fills with layer i+1 inputs; they swap at the layer boundary).  The
+    device executes solve(i) while the host is already tracing/dispatching
+    layer i+1's programs, and every host sync (the ``float(err)``
+    materializations) is deferred to one drain at the end of the stack.
+    Because the same jitted programs run on the same values in the same
+    data-dependency order, the quantized parameters are bit-identical to the
+    sequential schedule — only the dispatch timeline differs.
+
+Both schedulers reuse the per-meta trace cache (PR 1): on a homogeneous
+stack, capture(i+1) and apply(i) are the *same* XLA programs for every i,
+so overlapping them adds zero compilations.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+
+class LayerScheduler:
+    """Interface: drive the engine hooks over a stack of layer tasks.
+
+    ``run`` receives the engine (an ``RSQPipeline``), the ordered list of
+    layer tasks, and the per-batch activation list; it returns the
+    propagated activations and one ``(p_new, report)`` pair per task.
+    """
+
+    name = "base"
+    # whether this scheduler may elide the final layer's apply pass when
+    # the caller marks it dead (propagate_last=False).  The sequential
+    # scheduler keeps it for dispatch-stream fidelity with the legacy
+    # engine; the overlapped scheduler's contract is minimal dispatch.
+    skip_dead_apply = False
+
+    def run(self, engine, tasks: list, acts: list, *,
+            propagate_last: bool = True) -> tuple[list, list]:
+        """Drive the stack.  ``propagate_last=False`` tells the scheduler
+        the final layer's apply outputs feed nothing (the decoder case —
+        the pipeline only keeps the quantized params), so a scheduler with
+        ``skip_dead_apply`` may elide that whole batch sweep; the encoder
+        stack passes True because its outputs become the decoder's media
+        stream."""
+        raise NotImplementedError
+
+
+class SequentialScheduler(LayerScheduler):
+    """Strictly sequential dispatch (the pre-scheduler behavior)."""
+
+    name = "sequential"
+
+    def run(self, engine, tasks, acts, *, propagate_last=True):
+        outs = []
+        for task in tasks:
+            st = engine.layer_begin(task, acts)
+            for bi, x_b in enumerate(acts):
+                engine.layer_capture(st, bi, x_b)
+            p_new = engine.layer_solve(st)
+            # classic lock-step semantics: the per-weight error report is
+            # materialized (host sync) before any propagation is dispatched,
+            # and every layer propagates (even a dead final sweep) —
+            # exactly the pre-scheduler pipeline's dispatch stream
+            engine.layer_sync(st)
+            acts = [engine.layer_apply(st, p_new, bi, x_b)
+                    for bi, x_b in enumerate(acts)]
+            outs.append((p_new, engine.layer_finalize(st)))
+        return acts, outs
+
+
+class OverlappedScheduler(LayerScheduler):
+    """Double-buffered software pipeline over the layer stack.
+
+    Before the loop, every *distinct* layer program of the stack is
+    compiled concurrently on background threads (``engine.prewarm``): a
+    heterogeneous stack (hybrid attn/mamba, prefix + groups, K distinct
+    metas) pays its K XLA compilations serially under the lock-step
+    schedule but ~max(compiles) here — the dominant cold-start win.
+
+    Dispatch order for layer i (all asynchronous, no host syncs):
+
+        solve(i)                          # device: big GPTQ/LDLQ program
+        begin(i+1)                        # host: trace-cache lookup/trace
+        for each batch b:
+            y_b   = apply(i, b)           # reads solve(i) output
+            capture(i+1, y_b)             # reads apply(i, b) output
+        swap activation buffers
+
+    and the error-report materializations for *every* layer run once at the
+    end (the drain).  The host therefore never waits for solve(i) before
+    issuing layer i+1's work, which keeps the device queue full across
+    layer boundaries.
+    """
+
+    name = "overlapped"
+    skip_dead_apply = True
+
+    def run(self, engine, tasks, acts, *, propagate_last=True):
+        if not tasks:
+            return acts, []
+        engine.prewarm(tasks, acts)
+        pending = []  # (state, p_new) awaiting the drain
+        st = engine.layer_begin(tasks[0], acts)
+        for bi, x_b in enumerate(acts):
+            engine.layer_capture(st, bi, x_b)
+        for i in range(len(tasks)):
+            p_new = engine.layer_solve(st)  # dispatched, not synced
+            last = i + 1 >= len(tasks)
+            st_next = None if last else engine.layer_begin(tasks[i + 1], acts)
+            if not (last and not propagate_last and self.skip_dead_apply):
+                buf = []  # double buffer: fills while `acts` is still read
+                for bi, x_b in enumerate(acts):
+                    y_b = engine.layer_apply(st, p_new, bi, x_b)
+                    if st_next is not None:
+                        engine.layer_capture(st_next, bi, y_b)
+                    buf.append(y_b)
+                acts = buf
+            # else: minimal dispatch — the caller marked the final apply
+            # sweep dead, so it is never enqueued
+            pending.append((st, p_new))
+            st = st_next
+        # drain: every layer's device work is enqueued; materialize reports
+        outs = [(p_new, engine.layer_finalize(st_)) for st_, p_new in pending]
+        return acts, outs
+
+
+SCHEDULERS: dict[str, type[LayerScheduler]] = {
+    "sequential": SequentialScheduler,
+    "overlapped": OverlappedScheduler,
+}
+
+
+def get_scheduler(name: Optional[str] = None) -> LayerScheduler:
+    """Resolve a scheduler by name.
+
+    ``None`` auto-selects: sequential on CPU (whose lighter async dispatch
+    gains little from pipelining and whose debuggability benefits from
+    lock-step order), overlapped on accelerator backends.
+    """
+    if name is None or name == "auto":
+        name = ("sequential" if jax.default_backend() == "cpu"
+                else "overlapped")
+    try:
+        return SCHEDULERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; one of {sorted(SCHEDULERS)}"
+        ) from None
+
+
+def resolve_hessian_shards(shard_hessians: Any, ctx=None) -> int:
+    """Resolve the ``RSQConfig.shard_hessians`` knob to a shard count.
+
+    ``False``/``0``/``None`` -> 1 (dense accumulators); ``True`` -> the
+    data-axis size of ``ctx``'s mesh (dense when un-meshed); an int S > 1
+    pins S shards (useful for single-host streaming and for numerics tests
+    of the sharded reduction).  On a mesh an explicit S is rounded up to a
+    multiple of the data-axis size — otherwise the leading shard axis could
+    not be placed on the data axes and GSPMD would silently replicate the
+    accumulator, breaking the never-an-unsharded-Hessian invariant.
+    """
+    if shard_hessians is None or shard_hessians is False:
+        return 1
+    dp = (max(ctx.axis_size("dp"), 1)
+          if ctx is not None and getattr(ctx, "enabled", False) else 1)
+    if shard_hessians is True:
+        return dp
+    s = int(shard_hessians)
+    if s <= 1:
+        return 1
+    return -(-s // dp) * dp  # round up to a data-axis multiple

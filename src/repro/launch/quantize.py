@@ -45,6 +45,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--r-min", type=float, default=0.01)
     ap.add_argument("--no-rotate", action="store_true")
     ap.add_argument("--method", default="gptq", choices=["gptq", "ldlq"])
+    ap.add_argument("--scheduler", default="auto",
+                    choices=["auto", "sequential", "overlapped"],
+                    help="layer scheduler (auto: sequential on CPU, "
+                    "overlapped on accelerators)")
+    ap.add_argument("--shard-hessians", type=int, default=0,
+                    help="0: dense accumulators; S>1: S streaming "
+                    "partial-sum shards (single-host streaming; on a mesh "
+                    "the shard axis lands on the data axes via the "
+                    "pipeline's ParallelCtx)")
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--n-calib", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=128)
@@ -68,10 +77,20 @@ def main(argv=None) -> dict:
     heldout = corpus.sample(jax.random.key(12345), args.n_calib,
                             args.calib_seq)
 
+    if args.shard_hessians == -1:
+        # True (shard over mesh data axes) needs a mesh-enabled ParallelCtx,
+        # which this single-host CLI never builds — refuse rather than
+        # silently falling back to dense accumulators
+        ap.error("--shard-hessians -1 (mesh mode) is not available from "
+                 "this CLI; pass an explicit shard count S>1")
+    shard_h = args.shard_hessians if args.shard_hessians > 1 else False
     rsq = RSQConfig(bits=args.bits, group_size=args.group_size,
                     rotate=not args.no_rotate, importance=args.importance,
                     r_min=args.r_min, expansion=args.expansion,
-                    method=args.method, seed=args.seed)
+                    method=args.method, seed=args.seed,
+                    scheduler=(None if args.scheduler == "auto"
+                               else args.scheduler),
+                    shard_hessians=shard_h)
     base_ppl = eval_ppl(model, params, heldout, args.batch)
     qparams, report = quantize_model(model, params, calib, rsq,
                                      batch_size=args.batch, verbose=True)

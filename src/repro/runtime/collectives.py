@@ -10,6 +10,14 @@ reduce-scatter that re-quantizes each hop to int8 with per-chunk scales,
 followed by an all-gather of the int8 result; combined with the error
 feedback in optim/compression it gives 4x cheaper gradient reduction over
 the slow (DCN / inter-pod) axis.
+
+``ring_psum`` is the exact (fp-on-the-wire) sibling: the same
+bandwidth-optimal reduce-scatter + all-gather ring without requantization.
+It is what the streaming-Hessian path uses for its *single* solve-time
+reduction of per-device partial accumulators (core/distributed
+``make_sharded_hessian_fn(streaming=True)``) — each chunk's sum is
+computed on exactly one device and then broadcast, so every device ends
+with bit-identical copies regardless of ring position.
 """
 from __future__ import annotations
 
@@ -84,6 +92,53 @@ def matmul_reducescatter(x: jax.Array, w: jax.Array,
 
     acc = lax.fori_loop(0, n - 1, body, acc)
     return acc
+
+
+def ring_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Exact ring all-reduce (reduce-scatter + all-gather, fp on the wire).
+
+    x: per-device partial sums of identical shape (any leading dim — chunks
+    are zero-padded to divide by the axis size).  Each chunk is reduced in
+    a fixed ring-arrival order on its owner device and the finished chunk is
+    then gathered, so all devices hold the *same* floats (no per-device
+    summation-order skew), which is what lets the Hessian consumers treat
+    the result as replicated."""
+    n = lax.psum(1, axis_name)  # static axis size on every jax version
+    if n == 1:
+        return x
+    orig = x.shape[0]
+    pad = (-orig) % n
+    xp = (jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]) if pad else x)
+    idx = lax.axis_index(axis_name)
+    c = xp.shape[0] // n
+
+    def chunk(i):
+        owner = (idx + i) % n
+        return lax.dynamic_slice_in_dim(xp, owner * c, c, 0)
+
+    # reduce-scatter: after n-1 hops device idx holds the full sum of its
+    # own chunk (accumulated in ring order, identical for every device)
+    acc = chunk(1)
+
+    def rs_body(i, acc):
+        acc = lax.ppermute(acc, axis_name, _ring_perm(n, reverse=True))
+        return acc + chunk(i + 2)
+
+    acc = lax.fori_loop(0, n - 1, rs_body, acc)
+
+    # all-gather the reduced chunks
+    out = varying(jnp.zeros_like(xp), axis_name)
+
+    def ag_body(i, carry):
+        acc, out = carry
+        src = (idx - i) % n
+        out = lax.dynamic_update_slice_in_dim(out, acc, src * c, 0)
+        acc = lax.ppermute(acc, axis_name, _ring_perm(n))
+        return acc, out
+
+    _, out = lax.fori_loop(0, n, ag_body, (acc, out))
+    return out[:orig] if pad else out
 
 
 def ring_allreduce_int8(x: jax.Array, axis_name: str) -> jax.Array:

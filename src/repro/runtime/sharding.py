@@ -69,6 +69,20 @@ class ParallelCtx:
             return x
         return jax.lax.with_sharding_constraint(x, self.sharding(*entries))
 
+    def shard_leading(self, x, entry="dp"):
+        """Constrain only the leading axis of ``x`` to a mesh entry.
+
+        Rank-agnostic — used by the streaming Hessian accumulators, whose
+        partial-sum arrays are (S, d, d) for dense weights and (S, E, d, d)
+        for expert stacks: the shard axis lands on the data axes and every
+        trailing dim stays unsharded, so accumulation is device-local until
+        the one solve-time reduction."""
+        if not self.enabled or x.ndim < 1:
+            return x
+        if x.shape[0] % max(self.axis_size(entry), 1) != 0:
+            return x
+        return self.constrain(x, entry, *([None] * (x.ndim - 1)))
+
     def constrain_act(self, x):
         """Sequence-parallel residual-stream constraint for (B, T, D)
         activations: batch over data axes and, when divisible, sequence over

@@ -12,9 +12,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import RSQConfig, RSQPipeline
-from repro.core.distributed import gptq_quantize_batched
+from repro.core.distributed import gptq_quantize_batched, ldlq_quantize_batched
 from repro.core.gptq import gptq_quantize
 from repro.core.hessian import accumulate
+from repro.core.ldlq import ldlq_quantize
 from repro.core.pipeline import quantize_layer_weights
 from repro.core.quantizer import QuantSpec
 
@@ -76,6 +77,13 @@ def _solve_set(n, d_in=64, d_out=48, seed=0):
 @pytest.mark.parametrize("spec", [
     QuantSpec(bits=3, group_size=32),
     QuantSpec(bits=4, group_size=-1),
+    # 2-bit / small-group regression (ROADMAP parity note): the batched
+    # CPU trsm used to accumulate in a different order than the single
+    # call, and the ulp drift cascaded through per-group find_params into
+    # flipped codes.  Pinned by the batch-invariant triangular inverse
+    # (gptq._inv_upper) + the fused-multiply-free group-param form.
+    QuantSpec(bits=2, group_size=8),
+    QuantSpec(bits=2, group_size=8, sym=False),
 ])
 def test_batched_solve_matches_sequential(spec):
     ws, hs = _solve_set(3)
@@ -85,6 +93,44 @@ def test_batched_solve_matches_sequential(spec):
         assert np.array_equal(np.asarray(s["q"]), np.asarray(bat["q"][i]))
         np.testing.assert_allclose(np.asarray(s["w_deq"]),
                                    np.asarray(bat["w_deq"][i]), atol=2e-6)
+
+
+def test_batched_ldlq_matches_sequential():
+    """The vmapped LDLQ path (satellite of the scheduler PR) must agree
+    with per-weight sequential solves."""
+    ws, hs = _solve_set(3)
+    seq = [ldlq_quantize(w, h, block=32) for w, h in zip(ws, hs)]
+    bat = ldlq_quantize_batched(jnp.stack(ws), jnp.stack(hs), block=32)
+    for i, s in enumerate(seq):
+        np.testing.assert_allclose(np.asarray(s["w_deq"]),
+                                   np.asarray(bat["w_deq"][i]), atol=2e-5)
+        assert float(bat["err"][i]) == pytest.approx(float(s["err"]),
+                                                     rel=1e-3)
+
+
+def test_ldlq_layer_solve_uses_batched_path():
+    """quantize_layer_weights routes same-shape LDLQ solves (q/k/v) and
+    stacked experts through ldlq_quantize_batched, matching sequential."""
+    ws, hs = _solve_set(3)
+    p_block = {"mixer": {"wq": ws[0], "wk": ws[1], "wv": ws[2]}}
+    hessians = {"mixer/wq": hs[0], "mixer/wk": hs[1], "mixer/wv": hs[2]}
+    rsq = RSQConfig(method="ldlq", gptq_block=32)
+    new_p, report = quantize_layer_weights(p_block, hessians, rsq)
+    for name, w, h in zip(("wq", "wk", "wv"), ws, hs):
+        ref = ldlq_quantize(w, h, damp=rsq.damp, block=32)
+        np.testing.assert_allclose(np.asarray(new_p["mixer"][name]),
+                                   np.asarray(ref["w_deq"]), atol=2e-5)
+        assert report[f"mixer/{name}"] == pytest.approx(float(ref["err"]),
+                                                        rel=1e-3)
+    # stacked experts ride the same batched solver
+    w3, h3 = jnp.stack(ws), jnp.stack(hs)
+    new_p, report = quantize_layer_weights(
+        {"ffn": {"experts": {"wi": w3}}}, {"ffn/experts/wi": h3}, rsq)
+    for e in range(3):
+        ref = ldlq_quantize(w3[e], h3[e], damp=rsq.damp, block=32)
+        np.testing.assert_allclose(
+            np.asarray(new_p["ffn"]["experts"]["wi"][e]),
+            np.asarray(ref["w_deq"]), atol=2e-5)
 
 
 def test_shape_grouped_layer_solve_matches_sequential():
