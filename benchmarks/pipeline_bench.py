@@ -20,10 +20,14 @@ Two axes, both on a tiny multi-layer homogeneous model:
     compilations serialize process-wide).
 
 Results land in ``BENCH_pipeline.json`` at the repo root so future PRs
-have a perf trajectory to regress against (``benchmarks/run.py`` fails
-loudly on >20% regressions).  Wall times on this container are CPU
-numbers; the compile counts and the sequential/overlapped ordering are the
-portable claims.
+have a perf trajectory to regress against.  Timings are split into
+compile-inclusive cold fields (``cold_total_s``/``compile_s`` —
+informational) and ``steady_total_s`` fields, and ``benchmarks/run.py``
+applies its >20% regression gate to the *steady-state* fields only: cold
+totals swing with XLA compile noise and machine cache state, which made
+the old whole-wall-time gate cry wolf.  Wall times on this container are
+CPU numbers; the compile counts and the sequential/overlapped ordering are
+the portable claims.
 """
 from __future__ import annotations
 
@@ -60,6 +64,14 @@ def _toy_model(d_model: int = 64):
 
 
 def _run_engine(model, params, calib, *, trace_cache: bool) -> dict:
+    """One cold run (includes XLA compiles) and, for the trace-cached
+    engine, one steady-state repeat on the same pipeline.  Timings are
+    split so the regression gate (benchmarks/run.py) can key on
+    ``steady_total_s`` alone: cold totals carry multi-second compile noise
+    (machine- and cache-state-dependent), steady-state is the dispatch +
+    execute path that perf PRs actually move.  The per-layer-jit baseline
+    recompiles every layer on every run by design, so it reports a cold
+    total only."""
     jax.clear_caches()  # process-global jit cache would leak solver
     # compilations from one engine run into the other
     rsq = RSQConfig(bits=4, rotate=False, importance="attn_con",
@@ -67,16 +79,23 @@ def _run_engine(model, params, calib, *, trace_cache: bool) -> dict:
     pipe = RSQPipeline(model, rsq)
     t0 = time.perf_counter()
     _, report = pipe.run(params, calib, batch_size=BATCH)
-    total_s = time.perf_counter() - t0
+    cold_s = time.perf_counter() - t0
     layer_s = [l["seconds"] for l in report["layers"].values()]
-    return {
+    out = {
         "trace_cache": trace_cache,
         "n_layers": len(layer_s),
-        "total_s": round(total_s, 3),
+        "cold_total_s": round(cold_s, 3),
         "per_layer_s": layer_s,
         "mean_layer_s": round(sum(layer_s) / len(layer_s), 3),
         "compiles": dict(pipe.trace_counts),
     }
+    if trace_cache:
+        t0 = time.perf_counter()
+        q, _ = pipe.run(params, calib, batch_size=BATCH)
+        jax.block_until_ready(jax.tree.leaves(q))
+        out["steady_total_s"] = round(time.perf_counter() - t0, 3)
+        out["compile_s"] = round(cold_s - out["steady_total_s"], 3)
+    return out
 
 
 def _warm_schedulers() -> dict:
@@ -104,7 +123,7 @@ def _warm_schedulers() -> dict:
     return {
         name: {
             "scheduler": name,
-            "total_s": round(min(ts), 4),
+            "steady_total_s": round(min(ts), 4),
             "runs_s": [round(t, 4) for t in ts],
             "compiles": dict(pipes[name].trace_counts),  # warm: 0 retraces
         }
@@ -123,16 +142,17 @@ def run(table: Table | None = None):
     base = _run_engine(model, params, calib, trace_cache=False)
 
     table.add(
-        "fused_engine", fused["total_s"] * 1e6,
+        "fused_engine", fused["cold_total_s"] * 1e6,
         f"compiles_capture={fused['compiles']['capture']} "
         f"compiles_apply={fused['compiles']['apply']} "
-        f"mean_layer_s={fused['mean_layer_s']}")
+        f"steady_s={fused['steady_total_s']} "
+        f"compile_s={fused['compile_s']}")
     table.add(
-        "per_layer_jit_baseline", base["total_s"] * 1e6,
+        "per_layer_jit_baseline", base["cold_total_s"] * 1e6,
         f"compiles_capture={base['compiles']['capture']} "
         f"compiles_apply={base['compiles']['apply']} "
         f"mean_layer_s={base['mean_layer_s']}")
-    speedup = base["total_s"] / max(fused["total_s"], 1e-9)
+    speedup = base["cold_total_s"] / max(fused["cold_total_s"], 1e-9)
     table.add("fused_vs_baseline", 0.0,
               f"speedup={speedup:.2f}x "
               f"compile_ratio={base['compiles']['capture']}"
@@ -140,11 +160,11 @@ def run(table: Table | None = None):
 
     schedulers = _warm_schedulers()
     for name, res in schedulers.items():
-        table.add(f"scheduler_{name}_warm", res["total_s"] * 1e6,
-                  f"warm_total_s={res['total_s']} "
+        table.add(f"scheduler_{name}_warm", res["steady_total_s"] * 1e6,
+                  f"steady_total_s={res['steady_total_s']} "
                   f"retraces={res['compiles']['capture']}")
-    overlap_speedup = (schedulers["sequential"]["total_s"]
-                       / max(schedulers["overlapped"]["total_s"], 1e-9))
+    overlap_speedup = (schedulers["sequential"]["steady_total_s"]
+                       / max(schedulers["overlapped"]["steady_total_s"], 1e-9))
     table.add("overlapped_vs_sequential_warm", 0.0,
               f"speedup={overlap_speedup:.2f}x "
               f"blocking_syncs={N_LAYERS}:1")

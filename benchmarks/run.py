@@ -9,10 +9,15 @@ the derived ppl / claim fields (see benchmarks/common.py docstring).
 
 Benches that persist a ``BENCH_*.json`` at the repo root (currently the
 pipeline bench) are regression-guarded: the checked-in JSON is snapshotted
-before the run and every ``total_s`` field of the fresh result is compared
-against it — any wall-time >20% over the baseline fails the run loudly
-(exit 1).  ``--no-regression-check`` skips the guard (e.g. when moving the
-baselines to a new machine on purpose).
+before the run and every *steady-state* timing field (``steady_total_s``)
+of the fresh result is compared against it — any steady wall-time >20%
+over the baseline fails the run loudly (exit 1).  Cold/compile-inclusive
+fields (``cold_total_s``, ``compile_s``) are recorded for the trajectory
+but never gated: compile time is XLA-version and cache-state noise, and
+gating on it made the guard cry wolf (see ROADMAP).  CI runs this gate as
+a non-blocking job (.github/workflows/ci.yml).  ``--no-regression-check``
+skips the guard (e.g. when moving the baselines to a new machine on
+purpose).
 """
 from __future__ import annotations
 
@@ -25,15 +30,16 @@ from pathlib import Path
 from benchmarks.common import Table
 
 REPO = Path(__file__).resolve().parent.parent
-REGRESSION_TOL = 1.20  # fail when fresh total_s > baseline * this
+REGRESSION_TOL = 1.20  # fail when fresh steady_total_s > baseline * this
+GATED_FIELD = "steady_total_s"  # steady-state only; cold totals are noise
 
 
 def _timing_fields(payload, prefix=""):
-    """Yield (dotted_path, value) for every ``total_s`` leaf."""
+    """Yield (dotted_path, value) for every gated steady-state leaf."""
     if isinstance(payload, dict):
         for k, v in payload.items():
             p = f"{prefix}.{k}" if prefix else k
-            if k == "total_s" and isinstance(v, (int, float)):
+            if k == GATED_FIELD and isinstance(v, (int, float)):
                 yield p, float(v)
             else:
                 yield from _timing_fields(v, p)
@@ -92,7 +98,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benches")
     ap.add_argument("--no-regression-check", action="store_true",
-                    help="skip the >20%% BENCH_*.json wall-time guard")
+                    help="skip the >20%% BENCH_*.json steady-state guard")
     args = ap.parse_args()
 
     from benchmarks import (fig2_heuristics, fig3_dynamic, fig4_expansion,
@@ -130,7 +136,7 @@ def main() -> None:
     if not args.no_regression_check:
         regressions = check_regressions(baselines)
         if regressions:
-            print("\nBENCH REGRESSION (>20% over checked-in baseline):",
+            print("\nBENCH REGRESSION (steady-state >20% over checked-in baseline):",
                   file=sys.stderr)
             for line in regressions:
                 print(f"  {line}", file=sys.stderr)

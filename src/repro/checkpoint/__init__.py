@@ -1,1 +1,6 @@
 from repro.checkpoint.checkpoint import CheckpointManager  # noqa: F401
+from repro.checkpoint.packed import (  # noqa: F401
+    load_packed_artifact,
+    load_packed_params,
+    save_packed_artifact,
+)

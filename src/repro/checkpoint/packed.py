@@ -1,0 +1,239 @@
+"""Packed serving artifact — the calibration→serving hand-off format.
+
+The RSQ pipeline's sharded write-back emits, per quantized weight, the
+*packed* int codes (``quantizer.pack_codes``) plus per-group ``(scale,
+zero)`` — 4-8x smaller than the fp tensor.  This module persists and
+reloads that artifact:
+
+  * **save** — every jax leaf is written one *addressable shard at a time*
+    (``Array.addressable_shards``): on a d_out-sharded code tensor the host
+    never copies more than one shard's data at once into the write buffer.
+    The only routine that pulls a *full* array to the host is
+    :func:`_host_gather`; the sharded write-back path never calls it (the
+    regression test for the pipeline asserts exactly this), it exists for
+    the legacy host-gather baseline and for plain-numpy leaves.  The
+    on-disk artifact is one npz written by the single controller; true
+    multi-host pods need per-host shard files (one npz per host, merged
+    index in meta.json) — a recorded ROADMAP item, not yet built.
+  * **load** — shards are reassembled on host *in packed form* (host memory
+    only ever holds compressed bytes + the small group params) and the fp
+    weight first exists on device, via ``quantizer.dequantize_packed``
+    inside :func:`load_packed_params` — or never, when the consumer is the
+    ``quant_matmul`` kernel
+    (``kernels.quant_matmul.ops.packed_weight_from_artifact``).
+
+On-disk layout (``<dir>/``):
+
+  meta.json     — format tag, quant spec, per-entry metadata (d_in,
+                  group_size, dtype, layer location) and the shard index
+                  map of every saved field
+  packed.npz    — ``"<entry>/<field>@<k>"`` -> the k-th shard's local data
+  residual.npz  — the unquantized remainder of the param tree (norms,
+                  routers, embeddings, ...) with quantized leaves replaced
+                  by empty markers; treedef pickled in meta.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import dequantize_packed
+
+FORMAT = "rsq-packed-v1"
+_FIELDS = ("codes", "scale", "zero")
+
+
+def _host_gather(x) -> np.ndarray:
+    """Materialize a *full* (unsharded) array on host.
+
+    This is the single host-gather of the module: the legacy write-back
+    baseline (``RSQConfig.pack_writeback='host'``) routes every per-layer
+    ``(q, scales, zeros)`` through it; the sharded write-back path never
+    reaches it for any packed leaf."""
+    return np.asarray(jax.device_get(x))
+
+
+def _shard_items(x) -> list[tuple[list[list[int]], np.ndarray]]:
+    """(index, local data) per distinct addressable shard of ``x``.
+
+    Replicas beyond the first of each shard are skipped; a numpy array (the
+    host-gather baseline) is a single full shard."""
+    if isinstance(x, np.ndarray):
+        return [([[0, d] for d in x.shape], x)]
+    items, seen = [], set()
+    for sh in x.addressable_shards:
+        idx = tuple(s.indices(d)[:2] for s, d in zip(sh.index, x.shape))
+        if idx in seen:
+            continue
+        seen.add(idx)
+        items.append(([list(p) for p in idx], np.asarray(sh.data)))
+    return items
+
+
+def save_packed_artifact(directory, artifact: dict, *,
+                         params: Any = None, extra: dict | None = None,
+                         ) -> Path:
+    """Persist a pipeline artifact (``RSQPipeline.artifact``) to ``dir``.
+
+    ``params``: the quantized param tree; its quantized leaves are replaced
+    by empty markers and the remainder is stored as the fp residual so
+    :func:`load_packed_params` can reconstruct a complete model.
+    """
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    meta_entries: dict[str, dict] = {}
+    for name, entry in artifact["entries"].items():
+        em = dict(artifact["meta"][name])
+        em["fields"] = {}
+        for field in _FIELDS:
+            x = entry[field]
+            shards = _shard_items(x)
+            for k, (idx, data) in enumerate(shards):
+                arrays[f"{name}/{field}@{k}"] = data
+            em["fields"][field] = {
+                "shape": [int(s) for s in x.shape],
+                "dtype": str(np.dtype(shards[0][1].dtype)),
+                "shards": [idx for idx, _ in shards],
+            }
+        meta_entries[name] = em
+
+    meta = {"format": FORMAT, "spec": artifact["spec"],
+            "entries": meta_entries, "extra": extra or {}}
+    if params is not None:
+        residual = _strip_quantized(params, meta_entries)
+        leaves, treedef = jax.tree_util.tree_flatten(residual)
+        np.savez(d / "residual.npz",
+                 **{f"leaf_{i}": np.asarray(jax.device_get(l))
+                    for i, l in enumerate(leaves)})
+        meta["residual_treedef"] = pickle.dumps(treedef).hex()
+    tmp = d / "packed.tmp.npz"  # savez appends .npz to other suffixes
+    np.savez(tmp, **arrays)
+    os.rename(tmp, d / "packed.npz")
+    (d / "meta.json").write_text(json.dumps(meta))
+    return d
+
+
+# --------------------------------------------------------------- tree paths
+
+
+def _leaf_slot(params: Any, em: dict) -> tuple[Any, str, Optional[int]]:
+    """(parent node, leaf key, stack index or None) for one entry's leaf."""
+    kind = em["loc"][0]
+    parts = em["path"].split("/")
+    if kind == "prefix":
+        node, g = params["prefix"][em["loc"][1]], None
+    elif kind == "groups":
+        node, g = params["groups"][f"b{em['loc'][2]}"], em["loc"][1]
+    else:  # "enc"
+        node, g = params["encoder"]["groups"]["b0"], em["loc"][1]
+    for key in parts[:-1]:
+        node = node[key]
+    return node, parts[-1], g
+
+
+def _strip_quantized(params: Any, meta_entries: dict) -> Any:
+    """Copy of ``params`` with every packed leaf replaced by a marker (the
+    whole stacked tensor, for group layers — each of its layer slices is
+    reconstructed from the artifact)."""
+    out = jax.tree.map(lambda x: x, params)
+    if "prefix" in out:
+        out["prefix"] = [jax.tree.map(lambda x: x, p) for p in out["prefix"]]
+    marker = np.zeros((0,), np.int8)
+    for em in meta_entries.values():
+        node, leaf, _ = _leaf_slot(out, em)
+        node[leaf] = marker
+    return out
+
+
+# -------------------------------------------------------------------- load
+
+
+def _assemble_entry(z, name: str, em: dict) -> dict:
+    entry = {}
+    for field, fm in em["fields"].items():
+        out = np.empty(tuple(fm["shape"]), np.dtype(fm["dtype"]))
+        for k, idx in enumerate(fm["shards"]):
+            sl = tuple(slice(lo, hi) for lo, hi in idx)
+            out[sl] = z[f"{name}/{field}@{k}"]
+        entry[field] = out
+    return entry
+
+
+def load_packed_artifact(directory) -> tuple[dict, dict]:
+    """-> (entries, meta): per-entry assembled numpy ``codes/scale/zero``.
+
+    Host memory holds only the packed representation; dequantization is the
+    caller's (device-side) concern."""
+    d = Path(directory)
+    meta = json.loads((d / "meta.json").read_text())
+    assert meta["format"] == FORMAT, meta["format"]
+    with np.load(d / "packed.npz") as z:
+        entries = {name: _assemble_entry(z, name, em)
+                   for name, em in meta["entries"].items()}
+    return entries, meta
+
+
+def load_packed_entry(directory, name: str) -> dict:
+    """Assemble a single entry's ``codes/scale/zero`` (npz members load
+    lazily, so this reads just that weight's shards — handy for spot checks
+    against a large artifact)."""
+    d = Path(directory)
+    meta = json.loads((d / "meta.json").read_text())
+    assert meta["format"] == FORMAT, meta["format"]
+    with np.load(d / "packed.npz") as z:
+        return _assemble_entry(z, name, meta["entries"][name])
+
+
+def dequantize_entry(entry: dict, em: dict, spec: dict) -> jax.Array:
+    """One artifact entry -> fp weight, on device (packed bytes in, fp out)."""
+    w = dequantize_packed(
+        jnp.asarray(entry["codes"]), jnp.asarray(entry["scale"]),
+        jnp.asarray(entry["zero"]), bits=int(spec["bits"]),
+        d_in=int(em["d_in"]))
+    return w.astype(em.get("dtype", "float32"))
+
+
+def load_packed_params(directory) -> tuple[Any, dict]:
+    """-> (params, meta): a complete param tree for serving.
+
+    The fp residual loads as saved; every quantized weight is rebuilt on
+    device from its packed entry (group layers re-stack their per-layer
+    entries along the stacked axis) — the unpacked weight never exists on
+    host."""
+    d = Path(directory)
+    entries, meta = load_packed_artifact(d)
+    with np.load(d / "residual.npz") as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    treedef = pickle.loads(bytes.fromhex(meta["residual_treedef"]))
+    params = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def stack_key(em) -> tuple:
+        o = em["loc"][2] if em["loc"][0] == "groups" else 0
+        return (em["loc"][0], o, em["path"])
+
+    stacked: dict[tuple, dict[int, jax.Array]] = {}
+    stacked_em: dict[tuple, dict] = {}
+    for name, em in meta["entries"].items():
+        w = dequantize_entry(entries[name], em, meta["spec"])
+        node, leaf, g = _leaf_slot(params, em)
+        if g is None:
+            node[leaf] = w
+        else:
+            stacked.setdefault(stack_key(em), {})[g] = w
+            stacked_em[stack_key(em)] = em
+    for key, per_layer in stacked.items():
+        n = max(per_layer) + 1
+        assert sorted(per_layer) == list(range(n)), \
+            f"artifact is missing layers for {key}: {sorted(per_layer)}"
+        node, leaf, _ = _leaf_slot(params, stacked_em[key])
+        node[leaf] = jnp.stack([per_layer[g] for g in range(n)])
+    params = jax.tree.map(jnp.asarray, params)
+    return params, meta

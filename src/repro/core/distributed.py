@@ -44,6 +44,52 @@ from repro.runtime.collectives import ring_psum
 from repro.runtime.sharding import ParallelCtx
 
 
+def make_shard_reducer(ctx: ParallelCtx):
+    """Jitted ``(S, ...) -> (...)`` reduction of a streaming accumulator
+    whose leading shard axis lives on ``ctx``'s data axes, via the explicit
+    collective path: a local shard-sum followed by ONE exact all-reduce over
+    the data axis (bandwidth-optimal ``ring_psum`` for a single data axis, a
+    plain psum for pod x data meshes).  This is the reduce the calibration
+    pipeline dispatches at solve time when a live mesh is present —
+    replacing the GSPMD ``jnp.sum`` fallback — and the reduce
+    ``make_sharded_hessian_fn(streaming=True)`` returns.
+
+    Requires a mesh with a non-trivial data axis; callers without one keep
+    ``hessian.reduce_shards``."""
+    assert ctx.enabled and ctx.dp and ctx.axis_size("dp") > 1, \
+        "make_shard_reducer needs a live mesh with a data axis"
+    axes = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
+
+    def local_reduce(hs):
+        # local shard-sum then ONE exact all-reduce over the data
+        # axis — the only collective of the whole accumulation stream.
+        # Single data axis: bandwidth-optimal ring, chunked over the
+        # leading rows of the summed (d, d) / (E, d, d) partial;
+        # multi-axis (pod x data) meshes: a plain psum over both.
+        part = jnp.sum(hs, axis=0)
+        if isinstance(axes, str):
+            return ring_psum(part, axes)
+        return jax.lax.psum(part, axes)
+
+    def reduce_fn(h):
+        spec = P(axes, *([None] * (h.ndim - 1)))
+        out = P(*([None] * (h.ndim - 1)))
+        # replication checking is off: chunks of the ring all-reduce are
+        # each finalized on one owner device, so the output is
+        # numerically identical everywhere but not provably "replicated"
+        # to the tracer (kwarg name varies across jax versions)
+        for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+            try:
+                f = _shard_map(local_reduce, mesh=ctx.mesh,
+                               in_specs=(spec,), out_specs=out, **kw)
+                break
+            except TypeError:
+                continue
+        return f(h)
+
+    return jax.jit(reduce_fn)
+
+
 def make_sharded_hessian_fn(ctx: ParallelCtx, *, streaming: bool = False,
                             n_shards: int | None = None):
     """Sharded Hessian accumulation over ``ctx``'s data axes.
@@ -87,36 +133,7 @@ def make_sharded_hessian_fn(ctx: ParallelCtx, *, streaming: bool = False,
     acc = jax.jit(acc_stream)
 
     if ctx.enabled and ctx.dp and ctx.axis_size("dp") > 1:
-        axes = ctx.dp if len(ctx.dp) > 1 else ctx.dp[0]
-
-        def local_reduce(hs):
-            # local shard-sum then ONE exact all-reduce over the data
-            # axis — the only collective of the whole accumulation stream.
-            # Single data axis: bandwidth-optimal ring, chunked over the
-            # leading rows of the summed (d, d) / (E, d, d) partial;
-            # multi-axis (pod x data) meshes: a plain psum over both.
-            part = jnp.sum(hs, axis=0)
-            if isinstance(axes, str):
-                return ring_psum(part, axes)
-            return jax.lax.psum(part, axes)
-
-        def reduce_fn(h):
-            spec = P(axes, *([None] * (h.ndim - 1)))
-            out = P(*([None] * (h.ndim - 1)))
-            # replication checking is off: chunks of the ring all-reduce are
-            # each finalized on one owner device, so the output is
-            # numerically identical everywhere but not provably "replicated"
-            # to the tracer (kwarg name varies across jax versions)
-            for kw in ({"check_vma": False}, {"check_rep": False}, {}):
-                try:
-                    f = _shard_map(local_reduce, mesh=ctx.mesh,
-                                   in_specs=(spec,), out_specs=out, **kw)
-                    break
-                except TypeError:
-                    continue
-            return f(h)
-
-        return acc, jax.jit(reduce_fn)
+        return acc, make_shard_reducer(ctx)
     return acc, jax.jit(hess.reduce_shards)
 
 

@@ -52,6 +52,19 @@ The hot path is a scheduled stack of fused, trace-cached per-layer stages:
     experts go through the batched path directly, instead of a sequential
     Python loop.  Solve error reports are built lazily (jax scalars) so
     schedulers decide when the host pays the sync.
+  * **Sharded write-back** — ``RSQConfig.pack_output`` folds every solve's
+    ``(q, scale, zero)`` straight into the packed serving artifact
+    (``RSQPipeline.artifact``; persist via
+    ``checkpoint.packed.save_packed_artifact``): codes are packed by a
+    jitted ``quantizer.pack_codes`` (a d_in-axis op, so d_out shards pack
+    locally) and constrained onto the mesh's model axis — no host ever
+    holds an unsharded per-layer ``(q, scales)`` tensor, and the artifact
+    is saved one addressable shard at a time.  Input side, the pipeline
+    accepts a globally-sharded calibration array from
+    ``data.loader.CalibrationLoader`` (disjoint per-data-group slices)
+    whose rows feed the streaming accumulators chunk-aligned; the
+    solve-time shard reduction routes through the explicit ring collective
+    (``distributed.make_shard_reducer``) whenever a live mesh is present.
 """
 from __future__ import annotations
 
@@ -62,15 +75,18 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import hessian as hess
-from repro.core.distributed import gptq_quantize_batched, ldlq_quantize_batched
+from repro.core.distributed import (gptq_quantize_batched,
+                                    ldlq_quantize_batched,
+                                    make_shard_reducer)
 from repro.core.expansion import expand_dataset
 from repro.core.gptq import gptq_quantize
 from repro.core.importance import ImportanceInputs, get_strategy
 from repro.core.ldlq import ldlq_quantize
-from repro.core.quantizer import QuantSpec
+from repro.core.quantizer import QuantSpec, pack_codes
 from repro.core.rotation import rotate_model
 from repro.core.scheduler import get_scheduler, resolve_hessian_shards
 from repro.models.layers import rms_norm
@@ -108,6 +124,16 @@ class RSQConfig:
     # True = shard over the mesh's data axes (S = dp size); int S > 1 = S
     # partial-sum shards regardless of mesh — see hessian.accumulate
     shard_hessians: Any = False
+    # packed serving artifact: collect every solve's (q, scale, zero) as
+    # packed int codes during write-back (``RSQPipeline.artifact``; persist
+    # via checkpoint.packed.save_packed_artifact).  GPTQ only — the LDLQ/E8
+    # lattice rounder has no integer codes to pack.
+    pack_output: bool = False
+    # write-back path for the packed artifact: "sharded" packs on device
+    # and keeps codes/scales sharded over the model axis end to end (no
+    # host ever holds an unsharded per-layer tensor); "host" is the legacy
+    # gather-to-host baseline, kept for bit-parity tests
+    pack_writeback: str = "sharded"
 
     def spec(self) -> QuantSpec:
         return QuantSpec(bits=self.bits, group_size=self.group_size,
@@ -161,8 +187,8 @@ def finalize_layer_report(report: dict) -> dict:
 
 
 def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
-                           rsq: RSQConfig, *,
-                           defer: bool = False) -> tuple[dict, dict]:
+                           rsq: RSQConfig, *, defer: bool = False,
+                           collect: Optional[dict] = None) -> tuple[dict, dict]:
     """Solve GPTQ/LDLQ for every captured weight of one block.
 
     Solves are shape-grouped for both methods: all weights sharing
@@ -173,6 +199,11 @@ def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
 
     ``defer=True`` leaves the per-weight error report as jax scalars (no
     host sync); call :func:`finalize_layer_report` to materialize floats.
+
+    ``collect`` (GPTQ only): a dict that receives, per weight path, the raw
+    solve outputs ``{"q", "scale", "zero", "dtype"}`` as *device* arrays —
+    the feed of the packed serving artifact.  Slicing a batched solve's
+    output is a lazy device op, so nothing is gathered here.
     """
     report: dict[str, Any] = {}
     new_p = jax.tree.map(lambda x: x, p_block)
@@ -210,6 +241,9 @@ def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
                    gptq_quantize(w, h, spec, damp=rsq.damp, block=block))
             node[name] = out["w_deq"].astype(w.dtype)
             report[path] = out["err"]
+            if collect is not None and not use_ldlq:
+                collect[path] = {"q": out["q"], "scale": out["scale"],
+                                 "zero": out["zero"], "dtype": str(w.dtype)}
             continue
         ws = jnp.concatenate(
             [it[3][None] if it[3].ndim == 2 else it[3] for it in its])
@@ -221,15 +255,20 @@ def quantize_layer_weights(p_block: dict, hessians: dict[str, Any],
                                      block=block))
         o = 0
         for path, node, name, w, h in its:
+            sl = slice(o, o + 1) if w.ndim == 2 else slice(o, o + w.shape[0])
             if w.ndim == 2:
                 node[name] = out["w_deq"][o].astype(w.dtype)
                 report[path] = out["err"][o]
-                o += 1
             else:
-                e = w.shape[0]
-                node[name] = out["w_deq"][o : o + e].astype(w.dtype)
-                report[path] = out["err"][o : o + e].mean()
-                o += e
+                node[name] = out["w_deq"][sl].astype(w.dtype)
+                report[path] = out["err"][sl].mean()
+            if collect is not None and not use_ldlq:
+                idx = o if w.ndim == 2 else sl
+                collect[path] = {"q": out["q"][idx],
+                                 "scale": out["scale"][idx],
+                                 "zero": out["zero"][idx],
+                                 "dtype": str(w.dtype)}
+            o = sl.stop
     if not defer:
         report = finalize_layer_report(report)
     return new_p, report
@@ -276,6 +315,25 @@ class RSQPipeline:
                            if rsq.use_gram_kernel is not None
                            else jax.default_backend() == "tpu")
         self.n_hshards = resolve_hessian_shards(rsq.shard_hessians, ctx)
+        # solve-time reduction of the streaming (S, d, d) accumulators: the
+        # explicit collective path (one ring all-reduce over the data axis,
+        # core/distributed.make_shard_reducer) whenever a live mesh is
+        # present; the plain shard-sum (GSPMD-free) otherwise
+        if ctx.enabled and ctx.dp and ctx.axis_size("dp") > 1:
+            self._hreduce = make_shard_reducer(ctx)
+        else:
+            self._hreduce = jax.jit(hess.reduce_shards)
+        if rsq.pack_output:
+            if rsq.method != "gptq":
+                raise ValueError("pack_output needs integer codes; the "
+                                 "LDLQ/E8 rounder has none (method='gptq')")
+            if rsq.pack_writeback not in ("sharded", "host"):
+                raise ValueError(f"unknown pack_writeback "
+                                 f"{rsq.pack_writeback!r}")
+        self.artifact: Optional[dict] = None
+        self._art_entries: dict[str, dict] = {}
+        self._art_meta: dict[str, dict] = {}
+        self._pack = jax.jit(self._pack_sharded)
         self._layer_fns: dict[Any, _LayerFns] = {}
         self._prewarm: dict[Any, Any] = {}  # layer key -> compile future
         self._rc: Optional[_RunCtx] = None
@@ -318,6 +376,46 @@ class RSQPipeline:
                 h_new = self.ctx.shard_leading(h_new)
             hessians[path] = h_new
         return hessians
+
+    def _pack_sharded(self, q, scale, zero):
+        """On-device pack for the sharded write-back: codes are produced by
+        the jitted ``pack_codes`` (a d_in-axis op, so a d_out shard packs
+        locally) and all three artifact tensors are constrained onto the
+        model axis when divisible — they stay sharded until the per-shard
+        artifact save and no host copy of the unsharded tensor ever
+        exists."""
+        ctx = self.ctx
+        outs = []
+        for a in (pack_codes(q, self.rsq.bits), scale, zero):
+            if (ctx.enabled and ctx.tp
+                    and a.shape[-1] % ctx.axis_size("tp") == 0):
+                a = ctx.constrain(a, *([None] * (a.ndim - 1)), "tp")
+            outs.append(a)
+        return tuple(outs)
+
+    def _collect_packed(self, tag: str, collect: dict) -> None:
+        """Fold one layer's solve outputs into the serving artifact."""
+        from repro.checkpoint.packed import _host_gather
+
+        for path, sol in collect.items():
+            q, scale, zero = sol["q"], sol["scale"], sol["zero"]
+            if self.rsq.pack_writeback == "host":
+                # legacy baseline: the unsharded (q, scales, zeros) land on
+                # host, then get packed — the path the sharded write-back
+                # retires (and is regression-tested against, bit for bit)
+                q_np = _host_gather(q)
+                entry = {"codes": np.asarray(pack_codes(q_np, self.rsq.bits)),
+                         "scale": _host_gather(scale),
+                         "zero": _host_gather(zero)}
+            else:
+                codes, s, z = self._pack(q, scale, zero)
+                entry = {"codes": codes, "scale": s, "zero": z}
+            name = f"{tag}/{path}"
+            self._art_entries[name] = entry
+            self._art_meta[name] = {
+                "path": path, "tag": tag, "d_in": int(q.shape[-2]),
+                "group_size": int(q.shape[-2]) // int(scale.shape[-2]),
+                "dtype": sol["dtype"]}
 
     def _layer_key(self, meta, p_blk):
         p_sig = tuple((tuple(a.shape), str(a.dtype))
@@ -455,15 +553,23 @@ class RSQPipeline:
             state["task"].p_blk, x_b, med, tok, rc.counts, state["hessians"])
 
     def layer_solve(self, state: dict):
-        """Reduce Hessian shards (single psum) and dispatch the batched
+        """Reduce Hessian shards (one explicit ring all-reduce on a live
+        mesh, a plain shard-sum otherwise) and dispatch the batched
         GPTQ/LDLQ solves.  Returns the quantized block params; the error
-        report stays deferred in ``state`` (no host sync here)."""
+        report stays deferred in ``state`` (no host sync here).  With
+        ``pack_output`` the solve's (q, scale, zero) also flow straight
+        into the packed serving artifact — per the configured write-back,
+        packed on device and still sharded (default) or gathered to host
+        (legacy baseline)."""
         hessians = state.pop("hessians")
         if self.n_hshards > 1:
-            hessians = {p: hess.reduce_shards(h)
-                        for p, h in hessians.items()}
+            hessians = {p: self._hreduce(h) for p, h in hessians.items()}
+        collect: Optional[dict] = {} if self.rsq.pack_output else None
         p_new, state["pending"] = quantize_layer_weights(
-            state["task"].p_blk, hessians, self.rsq, defer=True)
+            state["task"].p_blk, hessians, self.rsq, defer=True,
+            collect=collect)
+        if collect:
+            self._collect_packed(state["task"].tag, collect)
         return p_new
 
     def layer_apply(self, state: dict, p_new, bi: int, x_b):
@@ -505,6 +611,8 @@ class RSQPipeline:
         # per-run compile accounting (cached jits from a previous run on the
         # same pipeline legitimately contribute 0 traces to this run)
         self.trace_counts.update(capture=0, apply=0)
+        self._art_entries, self._art_meta, self.artifact = {}, {}, None
+        tag2loc: dict[str, tuple] = {}
         report: dict[str, Any] = {"layers": {}, "rsq": dataclasses.asdict(rsq)}
         scheduler = get_scheduler(rsq.scheduler)
         report["scheduler"] = scheduler.name
@@ -559,6 +667,7 @@ class RSQPipeline:
             enc_acts, enc_outs = scheduler.run(self, enc_tasks, enc_acts,
                                                propagate_last=True)
             for li, (p_new, rep) in enumerate(enc_outs):
+                tag2loc[f"enc{li}"] = ("enc", li)
                 report["layers"][f"enc{li}"] = rep
                 new_params["encoder"]["groups"] = jax.tree.map(
                     lambda full, nw, li=li: full.at[li].set(nw),
@@ -587,6 +696,7 @@ class RSQPipeline:
         # apply pass (one full batch sweep of dispatched-and-discarded work)
         acts, outs = scheduler.run(self, tasks, acts, propagate_last=False)
         for task, loc, (p_new, rep) in zip(tasks, locs, outs):
+            tag2loc[task.tag] = loc
             report["layers"][task.tag] = rep
             if loc[0] == "prefix":
                 new_params["prefix"][loc[1]] = p_new
@@ -602,6 +712,16 @@ class RSQPipeline:
                 new_params["groups"] = stacked
 
         self._rc = None
+        if rsq.pack_output:
+            for name, em in self._art_meta.items():
+                em["loc"] = list(tag2loc[em["tag"]])
+            self.artifact = {
+                "entries": self._art_entries, "meta": self._art_meta,
+                "spec": {"bits": rsq.bits, "sym": rsq.sym,
+                         "group_size": rsq.group_size,
+                         "method": rsq.method}}
+            report["packed"] = {"entries": len(self._art_entries),
+                                "writeback": rsq.pack_writeback}
         report["rotations"] = {k: (None if v is None else "set")
                                for k, v in rotations.items()}
         report["trace_counts"] = dict(self.trace_counts)

@@ -89,21 +89,47 @@ def values_per_word(bits: int) -> int:
 
 
 def pack_codes(q: jax.Array, bits: int) -> jax.Array:
-    """q: (d_in, d_out) int codes -> (ceil(d_in/vpw), d_out) int32."""
+    """q: (..., d_in, d_out) int codes -> (..., ceil(d_in/vpw), d_out) uint32.
+
+    Rows that don't fill the last word (``d_in % values_per_word(bits)``,
+    the classic 3-bit edge case) are padded with zero codes, which the
+    ``d_in`` argument of :func:`unpack_codes` strips again.  Leading batch
+    axes (stacked expert weights) pack independently, and packing touches
+    only the d_in axis — a d_out-sharded ``q`` packs shard-locally, which is
+    what lets the pipeline's sharded write-back emit the serving artifact
+    without ever gathering an unsharded code tensor."""
     vpw = values_per_word(bits)
-    d_in, d_out = q.shape
+    d_in, d_out = q.shape[-2:]
     pad = (-d_in) % vpw
     if pad:
-        q = jnp.concatenate([q, jnp.zeros((pad, d_out), q.dtype)], axis=0)
-    qw = q.reshape(-1, vpw, d_out).astype(jnp.uint32)
-    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :, None]
-    return jnp.sum(qw << shifts, axis=1).astype(jnp.uint32)
+        q = jnp.concatenate(
+            [q, jnp.zeros(q.shape[:-2] + (pad, d_out), q.dtype)], axis=-2)
+    qw = q.reshape(q.shape[:-2] + (-1, vpw, d_out)).astype(jnp.uint32)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[:, None]
+    return jnp.sum(qw << shifts, axis=-2).astype(jnp.uint32)
 
 
 def unpack_codes(packed: jax.Array, bits: int, d_in: int) -> jax.Array:
-    """(n_words, d_out) uint32 -> (d_in, d_out) int32 codes."""
+    """(..., n_words, d_out) uint32 -> (..., d_in, d_out) int32 codes."""
     vpw = values_per_word(bits)
-    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[None, :, None]
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)[:, None]
     mask = jnp.uint32(2 ** bits - 1)
-    vals = (packed[:, None, :] >> shifts) & mask
-    return vals.reshape(-1, packed.shape[-1])[:d_in].astype(jnp.int32)
+    vals = (packed[..., :, None, :] >> shifts) & mask
+    out = vals.reshape(packed.shape[:-2] + (-1, packed.shape[-1]))
+    return out[..., :d_in, :].astype(jnp.int32)
+
+
+def dequantize_packed(packed: jax.Array, scale: jax.Array, zero: jax.Array,
+                      *, bits: int, d_in: int) -> jax.Array:
+    """Packed codes + per-group params -> fp weight, entirely on device.
+
+    packed: (..., n_words, d_out); scale/zero: (..., n_groups, d_out) with
+    the group size implied by ``d_in // n_groups``.  This is the serving
+    loader's reconstruction path (checkpoint/packed): host memory only ever
+    holds the packed artifact; the fp tensor first exists on device."""
+    q = unpack_codes(packed, bits, d_in)
+    g = scale.shape[-2]
+    assert d_in % g == 0, (d_in, g)
+    qg = q.reshape(q.shape[:-2] + (g, d_in // g, q.shape[-1]))
+    deq = dequantize(qg, scale[..., :, None, :], zero[..., :, None, :])
+    return deq.reshape(q.shape)

@@ -32,6 +32,15 @@ issued:
 Both schedulers reuse the per-meta trace cache (PR 1): on a homogeneous
 stack, capture(i+1) and apply(i) are the *same* XLA programs for every i,
 so overlapping them adds zero compilations.
+
+With ``RSQConfig.pack_output`` the solve stage also folds each layer's
+``(q, scale, zero)`` into the packed serving artifact
+(``engine.layer_solve`` -> ``RSQPipeline._collect_packed``).  The default
+sharded write-back only *dispatches* device work (pack + model-axis
+constraint), so it is scheduler-neutral: the overlapped timeline keeps its
+single end-of-stack drain.  The legacy ``pack_writeback="host"`` baseline
+host-gathers inside the solve stage — one more reason it is retired to a
+parity-test role.
 """
 from __future__ import annotations
 

@@ -1,3 +1,8 @@
 from repro.data.synthetic import SyntheticCorpus, zipf_tokens  # noqa: F401
-from repro.data.calibration import calibration_set  # noqa: F401
-from repro.data.loader import DataLoader  # noqa: F401
+from repro.data.calibration import (  # noqa: F401
+    CalibShard,
+    calibration_set,
+    calibration_shard,
+    shard_bounds,
+)
+from repro.data.loader import CalibrationLoader, DataLoader  # noqa: F401

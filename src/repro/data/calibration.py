@@ -1,14 +1,121 @@
-"""Calibration-set construction for the RSQ pipeline: n_samples x seq_len
-token matrix + the paper's dataset-expansion hook (core/expansion)."""
+"""Calibration-set construction for the RSQ pipeline.
+
+Two modes:
+
+  * ``calibration_set`` — the classic single-host (n_samples, seq_len)
+    token matrix (plus the paper's dataset-expansion hook, core/expansion).
+  * sharded calib — ``calibration_shard`` / ``CalibShard`` draw a
+    *disjoint, contiguous* slice of the exact same global set, deterministic
+    in ``(seed, shard)``: every row is sampled by its global index
+    (``SyntheticCorpus.sample_indexed``), so shard s materializes only rows
+    ``[s·N/S, (s+1)·N/S)`` and the union over shards is bit-identical to the
+    global draw.  Slices are contiguous (not strided) so that, assembled
+    into a jax.Array sharded over the mesh's data axes
+    (``data/loader.CalibrationLoader``), each device's rows are precisely
+    the rows it generated — and the flattened token rows line up with the
+    contiguous chunks of the streaming Hessian accumulators
+    (``hessian.accumulate(n_shards=S)``), which is what lets a calibration
+    batch feed the sharded accumulators with no global materialization and
+    no per-batch collective.
+
+``CalibShard`` is also a seekable batch iterator (``state``/``restore``),
+so a pod-scale calibration pass resumes exactly under ``(seed, step)``
+after a restart — same contract as ``data/loader.DataLoader``.
+"""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
+import jax.numpy as jnp
 
 from repro.data.synthetic import SyntheticCorpus
+
+
+def _calib_key(seed: int):
+    return jax.random.fold_in(jax.random.key(seed), 777)
 
 
 def calibration_set(vocab_size: int, n_samples: int, seq_len: int,
                     seed: int = 0, corpus: SyntheticCorpus | None = None):
     corpus = corpus or SyntheticCorpus(vocab_size=vocab_size, seed=seed)
-    key = jax.random.fold_in(jax.random.key(seed), 777)
-    return corpus.sample(key, n_samples, seq_len)
+    return corpus.sample_indexed(_calib_key(seed), jnp.arange(n_samples),
+                                 seq_len)
+
+
+def shard_bounds(n_samples: int, n_shards: int, shard: int) -> tuple[int, int]:
+    """Contiguous row range [lo, hi) owned by ``shard`` of ``n_shards``.
+
+    np.array_split semantics: the first ``n_samples % n_shards`` shards get
+    one extra row, so the slices are disjoint and cover [0, n_samples)."""
+    assert 0 <= shard < n_shards, (shard, n_shards)
+    base, rem = divmod(n_samples, n_shards)
+    lo = shard * base + min(shard, rem)
+    return lo, lo + base + (1 if shard < rem else 0)
+
+
+def calibration_shard(vocab_size: int, n_samples: int, seq_len: int, *,
+                      shard: int, n_shards: int, seed: int = 0,
+                      corpus: SyntheticCorpus | None = None):
+    """Rows [lo, hi) of ``calibration_set`` — only they are materialized."""
+    corpus = corpus or SyntheticCorpus(vocab_size=vocab_size, seed=seed)
+    lo, hi = shard_bounds(n_samples, n_shards, shard)
+    return corpus.sample_indexed(_calib_key(seed), jnp.arange(lo, hi),
+                                 seq_len)
+
+
+@dataclasses.dataclass
+class CalibShard:
+    """One data-parallel group's view of the calibration set.
+
+    ``take(lo, hi)`` materializes an arbitrary *global* row range restricted
+    to this shard; iteration yields this shard's slice of global batch
+    ``step`` (rows ``[step·B, (step+1)·B) ∩ [shard range)``), deterministic
+    and seekable in ``(seed, step)``."""
+
+    corpus: SyntheticCorpus
+    n_samples: int
+    seq_len: int
+    shard: int = 0
+    n_shards: int = 1
+    batch_size: int = 8
+    seed: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        self.lo, self.hi = shard_bounds(self.n_samples, self.n_shards,
+                                        self.shard)
+
+    # ------------------------------------------------------------- seekable
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed, "shard": self.shard}
+
+    def restore(self, state: dict) -> None:
+        assert int(state.get("shard", self.shard)) == self.shard, \
+            "restoring a different shard's loader state"
+        assert int(state.get("seed", self.seed)) == self.seed, \
+            "restoring a different seed's loader state (the resumed " \
+            "stream would silently mix two calibration sets)"
+        self.step = int(state["step"])
+
+    # ----------------------------------------------------------- generation
+    def take(self, lo: int, hi: int) -> jax.Array:
+        """Global rows [lo, hi) clipped to this shard's range."""
+        lo, hi = max(lo, self.lo), min(hi, self.hi)
+        return self.corpus.sample_indexed(
+            _calib_key(self.seed), jnp.arange(lo, max(hi, lo)), self.seq_len)
+
+    def local(self) -> jax.Array:
+        """This shard's full slice (the per-host calibration residency)."""
+        return self.take(self.lo, self.hi)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> jax.Array:
+        lo = self.step * self.batch_size
+        if lo >= self.n_samples:
+            raise StopIteration
+        out = self.take(lo, lo + self.batch_size)
+        self.step += 1
+        return out

@@ -1,9 +1,21 @@
-"""Sharded, seekable data loader.
+"""Sharded, seekable data loaders.
 
 Each host materializes only its slice of the global batch (host-local,
 deterministic in (seed, step)) and the arrays are assembled into globally
 sharded jax.Arrays — resume-exact after checkpoint restart and free of
 cross-host data dependencies (straggler mitigation at the input layer).
+
+``DataLoader`` is the training-side iterator.  ``CalibrationLoader`` is the
+calib mode: each data-parallel group draws a *disjoint* contiguous slice of
+the calibration set (``data/calibration.CalibShard`` — deterministic in
+``(seed, shard)``) and the slices are assembled into a globally-sharded
+(N, T) array via ``jax.make_array_from_callback``, so the per-device buffer
+is generated from that device's global index range and the unsharded batch
+is never materialized anywhere.  Because slices are contiguous and land on
+the mesh's data axes, the flattened token rows coincide with the contiguous
+chunks of the streaming Hessian accumulators
+(``hessian.accumulate(n_shards=S)``): calibration bytes flow host-shard ->
+device-shard -> sharded accumulator with zero per-batch collectives.
 """
 from __future__ import annotations
 
@@ -12,7 +24,9 @@ from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.data.calibration import CalibShard
 from repro.data.synthetic import SyntheticCorpus
 from repro.runtime.sharding import ParallelCtx
 
@@ -44,3 +58,105 @@ class DataLoader:
             batch = jax.device_put(batch, {k: sh for k in batch})
         self.step += 1
         return batch
+
+
+@dataclasses.dataclass
+class CalibrationLoader:
+    """Per-group sharded calibration feed (see module docstring).
+
+    ``dataset()`` returns the full (n_samples, seq_len) calibration set as
+    one globally-sharded array; iteration yields per-step (batch, seq_len)
+    sharded batches for streaming-Hessian consumers
+    (``core.distributed.make_sharded_hessian_fn(streaming=True)``).  Both
+    are deterministic in ``(seed, shard)`` and the iterator is seekable in
+    ``(seed, step)`` — exact resume after an interrupted calibration pass.
+
+    Without a mesh (``ctx.enabled`` False) there is a single shard and the
+    loader degenerates to ``calibration_set`` exactly.
+    """
+
+    corpus: SyntheticCorpus
+    n_samples: int
+    seq_len: int
+    ctx: ParallelCtx = ParallelCtx()
+    batch_size: int = 8
+    seed: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        self.n_shards = max(self.ctx.axis_size("dp"), 1)
+        if self.ctx.enabled and self.n_shards > 1:
+            assert self.n_samples % self.n_shards == 0, (
+                f"n_samples={self.n_samples} must divide over the "
+                f"{self.n_shards}-way data axis for an even mesh layout")
+            # every iterated batch (incl. the final partial one, whose size
+            # is n_samples mod batch_size and therefore also divisible)
+            # must tile over the data axis — make_array_from_callback
+            # cannot shard a ragged leading dim
+            assert self.batch_size % self.n_shards == 0, (
+                f"batch_size={self.batch_size} must divide over the "
+                f"{self.n_shards}-way data axis")
+        self._shards = [
+            CalibShard(self.corpus, self.n_samples, self.seq_len,
+                       shard=s, n_shards=self.n_shards,
+                       batch_size=self.batch_size, seed=self.seed)
+            for s in range(self.n_shards)]
+
+    # ------------------------------------------------------------- seekable
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        assert int(state.get("seed", self.seed)) == self.seed, \
+            "restoring a different seed's loader state"
+        self.step = int(state["step"])
+
+    # ------------------------------------------------------------- assembly
+    def _assemble(self, n_rows: int, gen) -> jax.Array:
+        """Build a globally-sharded (n_rows, seq_len) int32 array where each
+        device's buffer comes from ``gen(lo, hi)`` over its own global row
+        range only — the unsharded array is never formed."""
+        if not self.ctx.enabled or self.n_shards == 1:
+            return gen(0, n_rows)
+        sharding = self.ctx.sharding("dp", None)
+        cache: dict[tuple[int, int], np.ndarray] = {}
+
+        def cb(index):
+            rs = index[0]
+            lo = rs.start or 0
+            hi = rs.stop if rs.stop is not None else n_rows
+            if (lo, hi) not in cache:  # one generation per distinct slice
+                cache[(lo, hi)] = np.asarray(gen(lo, hi))
+            return cache[(lo, hi)]
+
+        return jax.make_array_from_callback(
+            (n_rows, self.seq_len), sharding, cb)
+
+    def _rows(self, lo: int, hi: int) -> jax.Array:
+        """Global rows [lo, hi), pulled from the owning shard(s)."""
+        parts = [sh.take(lo, hi) for sh in self._shards
+                 if sh.hi > lo and sh.lo < hi]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def dataset(self) -> jax.Array:
+        """The full calibration set, sharded over the data axes.
+
+        Device d generates rows from the shard(s) covering its index range
+        (contiguous, disjoint, deterministic in ``(seed, shard)``); on a
+        multi-host pod each host only ever touches its addressable slices.
+        """
+        return self._assemble(self.n_samples, self._rows)
+
+    # ------------------------------------------------------------ iteration
+    def __iter__(self) -> Iterator[jax.Array]:
+        return self
+
+    def __next__(self) -> jax.Array:
+        lo = self.step * self.batch_size
+        if lo >= self.n_samples:
+            raise StopIteration
+        hi = min(lo + self.batch_size, self.n_samples)
+        out = self._assemble(
+            hi - lo, lambda b_lo, b_hi: self._rows(lo + b_lo, lo + b_hi))
+        self.step += 1
+        return out

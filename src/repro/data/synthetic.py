@@ -73,6 +73,19 @@ class SyntheticCorpus:
         return jnp.concatenate([topic_tok[:, None], toks.swapaxes(0, 1)],
                                axis=1)
 
+    def sample_indexed(self, key, indices, seq_len: int) -> jax.Array:
+        """(len(indices), seq_len) int32 — sample rows *by global index*.
+
+        Row ``i`` depends only on ``(key, indices[i])``: sampling any subset
+        of indices yields exactly the corresponding rows of the full set.
+        This is the per-sample determinism contract the sharded calibration
+        loader builds on (data/calibration.py): each data-parallel group
+        materializes only its own disjoint index slice, and the union over
+        groups is bit-identical to the single-host global draw."""
+        indices = jnp.asarray(indices, jnp.int32)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(indices)
+        return jax.vmap(lambda k: self.sample(k, 1, seq_len)[0])(keys)
+
     def batches(self, batch: int, seq_len: int, n_steps: int,
                 start_step: int = 0):
         """Deterministic, seekable iterator — the data-side contract that

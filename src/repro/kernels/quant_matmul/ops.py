@@ -40,6 +40,23 @@ def pack_weight(q: jax.Array, scale: jax.Array, zero: jax.Array,
         bits=spec.bits, group_size=gs, d_in=d_in)
 
 
+def packed_weight_from_artifact(entry: dict, em: dict,
+                                spec: dict) -> PackedWeight:
+    """Packed-artifact entry (``checkpoint.packed``) -> ``PackedWeight``.
+
+    The codes move host->device still packed and ``quant_matmul`` consumes
+    them directly — the serving path never unpacks on host.  ``entry`` is
+    one ``load_packed_artifact`` entry, ``em``/``spec`` its per-entry and
+    artifact-level metadata."""
+    codes = jnp.asarray(entry["codes"])
+    assert codes.ndim == 2, "quant_matmul serves dense 2-D weights " \
+        f"(expert stacks dequantize via checkpoint.packed): {codes.shape}"
+    return PackedWeight(
+        w_packed=codes, scale=jnp.asarray(entry["scale"]),
+        zero=jnp.asarray(entry["zero"]), bits=int(spec["bits"]),
+        group_size=int(em["group_size"]), d_in=int(em["d_in"]))
+
+
 def quant_matmul(x: jax.Array, pw: PackedWeight) -> jax.Array:
     m, k = x.shape
     vpw = 32 // pw.bits

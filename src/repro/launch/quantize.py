@@ -6,6 +6,13 @@ and optionally packs the quantized weights for the serving kernel.
 
   PYTHONPATH=src python -m repro.launch.quantize --arch llama3-8b-smoke \
       --bits 3 --importance attn_con --expansion 8
+
+Pod-scale data path: ``--shard-calib`` draws the calibration set as
+disjoint per-data-group shards assembled into a globally-sharded array
+(no host ever materializes the unsharded batch) and turns the streaming
+sharded Hessian accumulators on; ``--pack-out DIR`` writes the packed
+serving artifact (codes packed on device, sharded write-back) that
+``launch.serve --packed DIR`` loads without unpacking on host.
 """
 from __future__ import annotations
 
@@ -17,11 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
+from repro.checkpoint.packed import save_packed_artifact
 from repro.configs import get_config
-from repro.core import RSQConfig, quantize_model
+from repro.core import RSQConfig, RSQPipeline
 from repro.data.calibration import calibration_set
+from repro.data.loader import CalibrationLoader
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
+from repro.runtime.sharding import LOCAL, ParallelCtx
 
 
 def eval_ppl(model, params, tokens, batch: int = 8) -> float:
@@ -54,6 +64,22 @@ def main(argv=None) -> dict:
                     "partial-sum shards (single-host streaming; on a mesh "
                     "the shard axis lands on the data axes via the "
                     "pipeline's ParallelCtx)")
+    ap.add_argument("--shard-calib", action="store_true",
+                    help="sharded calibration loading: every data-parallel "
+                    "group draws its own disjoint, (seed, shard)-"
+                    "deterministic slice of the calibration set and the "
+                    "slices assemble into one globally-sharded array — the "
+                    "unsharded batch never exists on any host.  With >1 "
+                    "local device this builds a data mesh over all devices "
+                    "and also enables the streaming sharded Hessian "
+                    "accumulators; with 1 device it degenerates to the "
+                    "global draw (bit-identical tokens either way)")
+    ap.add_argument("--pack-out", default=None, metavar="DIR",
+                    help="write the packed serving artifact here: per-"
+                    "weight int codes packed on device (sharded write-back "
+                    "— no host copy of any unsharded (q, scales) tensor) "
+                    "plus the fp residual tree; load with launch.serve "
+                    "--packed DIR or checkpoint.packed.load_packed_params")
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--n-calib", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=128)
@@ -72,28 +98,44 @@ def main(argv=None) -> dict:
         params = jax.jit(model.init)(jax.random.key(args.seed))
 
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
-    calib = calibration_set(cfg.vocab_size, args.n_calib, args.calib_seq,
-                            seed=args.seed, corpus=corpus)
+    ctx = LOCAL
+    if args.shard_calib:
+        n_dev = jax.device_count()
+        if n_dev > 1:
+            mesh = jax.make_mesh((n_dev,), ("data",))
+            ctx = ParallelCtx(mesh=mesh, dp=("data",))
+        calib = CalibrationLoader(corpus, args.n_calib, args.calib_seq,
+                                  ctx=ctx, batch_size=args.batch,
+                                  seed=args.seed).dataset()
+    else:
+        calib = calibration_set(cfg.vocab_size, args.n_calib, args.calib_seq,
+                                seed=args.seed, corpus=corpus)
     heldout = corpus.sample(jax.random.key(12345), args.n_calib,
                             args.calib_seq)
 
-    if args.shard_hessians == -1:
-        # True (shard over mesh data axes) needs a mesh-enabled ParallelCtx,
-        # which this single-host CLI never builds — refuse rather than
-        # silently falling back to dense accumulators
-        ap.error("--shard-hessians -1 (mesh mode) is not available from "
-                 "this CLI; pass an explicit shard count S>1")
-    shard_h = args.shard_hessians if args.shard_hessians > 1 else False
+    if args.shard_hessians == -1 and not ctx.enabled:
+        # True (shard over mesh data axes) needs a mesh-enabled ParallelCtx;
+        # only --shard-calib with >1 local device builds one — refuse
+        # rather than silently falling back to dense accumulators
+        ap.error("--shard-hessians -1 (mesh mode) needs --shard-calib and "
+                 ">1 local device (which build the data mesh); or pass an "
+                 "explicit shard count S>1")
+    shard_h = (True if args.shard_hessians == -1
+               else args.shard_hessians if args.shard_hessians > 1 else False)
+    if args.shard_calib and ctx.enabled and not shard_h:
+        shard_h = True  # sharded batches feed sharded accumulators directly
     rsq = RSQConfig(bits=args.bits, group_size=args.group_size,
                     rotate=not args.no_rotate, importance=args.importance,
                     r_min=args.r_min, expansion=args.expansion,
                     method=args.method, seed=args.seed,
                     scheduler=(None if args.scheduler == "auto"
                                else args.scheduler),
-                    shard_hessians=shard_h)
+                    shard_hessians=shard_h,
+                    pack_output=args.pack_out is not None)
     base_ppl = eval_ppl(model, params, heldout, args.batch)
-    qparams, report = quantize_model(model, params, calib, rsq,
-                                     batch_size=args.batch, verbose=True)
+    pipe = RSQPipeline(model, rsq, ctx=ctx)
+    qparams, report = pipe.run(params, calib, batch_size=args.batch,
+                               verbose=True)
     q_ppl = eval_ppl(model, qparams, heldout, args.batch)
     summary = {
         "arch": args.arch, "rsq": dataclasses.asdict(rsq),
@@ -101,6 +143,11 @@ def main(argv=None) -> dict:
         "ppl_ratio": q_ppl / base_ppl,
         "n_weights": sum(len(l["weights"]) for l in report["layers"].values()),
     }
+    if args.pack_out:
+        save_packed_artifact(args.pack_out, pipe.artifact, params=qparams,
+                             extra={"arch": args.arch,
+                                    "rsq": dataclasses.asdict(rsq)})
+        summary["pack_out"] = args.pack_out
     print(json.dumps(summary, indent=2))
     if args.out:
         with open(args.out, "w") as f:

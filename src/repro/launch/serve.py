@@ -3,6 +3,13 @@ weight-only quantized execution (RSQ output + quant_matmul kernel).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b-smoke \
       --batch 4 --prompt-len 32 --gen 16
+
+``--packed DIR`` serves from a packed RSQ artifact (written by
+launch.quantize --pack-out): host memory only ever holds the packed int
+codes + group scales; every fp weight is reconstructed on device
+(``checkpoint.packed.load_packed_params``), and ``--kernel-check``
+additionally runs one projection through the ``quant_matmul`` kernel
+straight from the packed codes (no unpacking anywhere on host).
 """
 from __future__ import annotations
 
@@ -42,6 +49,31 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
     return jnp.concatenate(toks, axis=1)
 
 
+def _kernel_check(packed_dir: str, meta: dict) -> None:
+    """Drive ``quant_matmul`` straight from packed artifact codes and
+    cross-check against the on-device dequantized matmul.  Loads just the
+    one entry it checks (the full artifact was already loaded for params).
+    """
+    from repro.checkpoint.packed import dequantize_entry, load_packed_entry
+    from repro.kernels.quant_matmul.ops import (packed_weight_from_artifact,
+                                                quant_matmul)
+
+    name = next((n for n, em in meta["entries"].items()
+                 if len(em["fields"]["codes"]["shape"]) == 2), None)
+    if name is None:  # all-expert-stack artifact: nothing 2-D to drive
+        print("kernel-check: no dense 2-D weight in the artifact; skipped")
+        return
+    em = meta["entries"][name]
+    entry = load_packed_entry(packed_dir, name)
+    pw = packed_weight_from_artifact(entry, em, meta["spec"])
+    x = jax.random.normal(jax.random.key(7), (8, pw.d_in), jnp.float32)
+    y = quant_matmul(x, pw)
+    ref = x @ dequantize_entry(entry, em, meta["spec"])
+    err = float(jnp.max(jnp.abs(y - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    print(f"kernel-check [{name}]: quant_matmul vs dequant rel_err={err:.2e}")
+    assert err < 1e-5, err
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b-smoke")
@@ -50,11 +82,39 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--packed", default=None, metavar="DIR",
+                    help="serve from a packed RSQ artifact (written by "
+                    "launch.quantize --pack-out): weights travel host->"
+                    "device as packed int codes and dequantize on device")
+    ap.add_argument("--kernel-check", action="store_true",
+                    help="with --packed: also run one projection through "
+                    "the quant_matmul kernel directly from the packed codes")
     args = ap.parse_args(argv)
+    if args.kernel_check and not args.packed:
+        ap.error("--kernel-check requires --packed (it drives the kernel "
+                 "from the packed artifact's codes)")
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
     model = build_model(cfg)
-    params = jax.jit(model.init)(jax.random.key(args.seed))
+    if args.packed:
+        from repro.checkpoint.packed import load_packed_params
+
+        params, meta = load_packed_params(args.packed)
+        arch = meta.get("extra", {}).get("arch")
+        assert arch in (None, args.arch), \
+            f"artifact was quantized for --arch {arch}, serving {args.arch}"
+        import math
+
+        n_packed = len(meta["entries"])
+        packed_mb = sum(
+            math.prod(em["fields"]["codes"]["shape"]) * 4
+            for em in meta["entries"].values()) / 1e6
+        print(f"packed artifact: {n_packed} weights, codes {packed_mb:.1f}MB "
+              f"(bits={meta['spec']['bits']})")
+        if args.kernel_check:
+            _kernel_check(args.packed, meta)
+    else:
+        params = jax.jit(model.init)(jax.random.key(args.seed))
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
     prompts = corpus.sample(jax.random.key(1), args.batch, args.prompt_len)
 

@@ -11,6 +11,7 @@ from repro.core.quantizer import (
     quantize_rtn,
     quantize_weight_rtn,
     unpack_codes,
+    values_per_word,
 )
 
 
@@ -33,6 +34,64 @@ def test_pack_unpack_identity(bits):
     assert packed.dtype == jnp.uint32
     out = unpack_codes(packed, bits, 100)
     assert bool(jnp.all(out == q))
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("d_in", [1, 9, 37, 101])
+def test_pack_unpack_ragged_d_in(bits, d_in):
+    """Roundtrip when d_in doesn't fill the last 32-bit word.
+
+    3-bit is the classic overflow edge case: 10 values per word with 2 dead
+    bits, so nearly every d_in is ragged and the top lane shifts by 27 —
+    codes must land below bit 30, never touch the dead bits, and the pad
+    rows must decode away exactly."""
+    vpw = values_per_word(bits)
+    q = jax.random.randint(jax.random.key(bits * 100 + d_in), (d_in, 8),
+                           0, 2 ** bits)
+    packed = pack_codes(q, bits)
+    assert packed.shape == (-(-d_in // vpw), 8)
+    assert bool(jnp.all(unpack_codes(packed, bits, d_in) == q))
+    # pad lanes beyond d_in hold zero codes (the serving kernels rely on
+    # deterministic padding when tiling over full words)
+    tail = unpack_codes(packed, bits, packed.shape[0] * vpw)[d_in:]
+    assert bool(jnp.all(tail == 0))
+
+
+def test_pack_unpack_max_codes_all_lanes():
+    """All-maxq codes at 3 bit: every lane saturated (incl. the <<27 one)
+    must survive the uint32 round trip — the historic overflow trap."""
+    for bits in (2, 3, 4, 8):
+        d_in = values_per_word(bits) * 2 + 3
+        q = jnp.full((d_in, 4), 2 ** bits - 1, jnp.int32)
+        assert bool(jnp.all(unpack_codes(pack_codes(q, bits), bits, d_in)
+                            == q))
+
+
+def test_pack_unpack_batched_leading_axes():
+    """Stacked-expert (E, d_in, d_out) codes pack per expert, identically
+    to packing each slice — the sharded write-back path packs expert
+    stacks in one call."""
+    bits, d_in = 3, 23
+    q = jax.random.randint(jax.random.key(0), (3, d_in, 8), 0, 2 ** bits)
+    packed = pack_codes(q, bits)
+    assert packed.shape == (3, -(-d_in // values_per_word(bits)), 8)
+    for e in range(3):
+        assert bool(jnp.all(packed[e] == pack_codes(q[e], bits)))
+    assert bool(jnp.all(unpack_codes(packed, bits, d_in) == q))
+
+
+def test_dequantize_packed_matches_explicit():
+    """dequantize_packed == unpack + per-group dequantize, including a
+    ragged d_in and >1 group."""
+    from repro.core.quantizer import dequantize_packed
+
+    bits, d_in, d_out, gs = 4, 32, 8, 16
+    q = jax.random.randint(jax.random.key(1), (d_in, d_out), 0, 2 ** bits)
+    s = jax.random.uniform(jax.random.key(2), (d_in // gs, d_out)) + 0.1
+    z = jnp.full((d_in // gs, d_out), 7.0)
+    w = dequantize_packed(pack_codes(q, bits), s, z, bits=bits, d_in=d_in)
+    ref = dequantize(q.reshape(-1, gs, d_out), s[:, None], z[:, None])
+    assert bool(jnp.all(w == ref.reshape(d_in, d_out)))
 
 
 def test_asym_covers_range():
