@@ -58,7 +58,7 @@ def run(table: Table | None = None):
     _, q, s, z = quantize_weight_rtn(w, spec)
     pw = pack_weight(q, s, z, spec)
     xx = jax.random.normal(jax.random.key(4), (m, k))
-    us = _time(lambda a: quant_matmul(a, pw), xx)
+    us = _time(lambda a: quant_matmul(a, pw, use_kernel=True), xx)
     bytes_w = k * nn / 2  # int4
     tpu_us = max(2 * m * k * nn / PEAK_FLOPS, bytes_w / HBM_BW) * 1e6
     bf16_us = (k * nn * 2) / HBM_BW * 1e6

@@ -7,8 +7,8 @@ the derived ppl / claim fields (see benchmarks/common.py docstring).
   PYTHONPATH=src python -m benchmarks.run            # all tables
   PYTHONPATH=src python -m benchmarks.run --only table2_main,roofline
 
-Benches that persist a ``BENCH_*.json`` at the repo root (currently the
-pipeline bench) are regression-guarded: the checked-in JSON is snapshotted
+Benches that persist a ``BENCH_*.json`` at the repo root (the pipeline
+and serve benches) are regression-guarded: the checked-in JSON is snapshotted
 before the run and every *steady-state* timing field (``steady_total_s``)
 of the fresh result is compared against it — any steady wall-time >20%
 over the baseline fails the run loudly (exit 1).  Cold/compile-inclusive
@@ -103,8 +103,8 @@ def main() -> None:
 
     from benchmarks import (fig2_heuristics, fig3_dynamic, fig4_expansion,
                             kernels_bench, pipeline_bench, roofline,
-                            table1_chunks, table2_main, table4_calib,
-                            table5_bits, table6_vq)
+                            serve_bench, table1_chunks, table2_main,
+                            table4_calib, table5_bits, table6_vq)
 
     benches = {
         "table1_chunks": lambda t: table1_chunks.run(table=t),
@@ -117,6 +117,7 @@ def main() -> None:
         "table6_vq": lambda t: table6_vq.run(table=t),
         "kernels": lambda t: kernels_bench.run(table=t),
         "pipeline": lambda t: pipeline_bench.run(table=t),
+        "serve": lambda t: serve_bench.run(table=t),
         "roofline": lambda t: roofline.run(table=t),
     }
     selected = (args.only.split(",") if args.only else list(benches))

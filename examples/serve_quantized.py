@@ -1,24 +1,30 @@
-"""Serve a small RSQ-quantized model with batched requests.
+"""Serve a small RSQ-quantized model with batched requests, keep-packed.
 
-Pipeline: init -> RSQ-quantize (3-bit) -> prefill a batch of prompts ->
-greedy decode with the KV cache.  Shows that the quantized parameter tree
-drops into the exact same serving path, plus the packed int4 path through
-the quant_matmul kernel for one projection.
+Pipeline: init -> RSQ-quantize (4-bit, ``pack_output``) -> persist the
+packed serving artifact -> reload it with the codes *kept packed in HBM*
+(``load_packed_forward_params``) -> prefill a batch of prompts -> greedy
+decode with the KV cache.  The packed parameter tree drops into the exact
+same serving path as the fp one: every dense projection dispatches
+through ``models.layers.linear``, which feeds ``PackedWeight`` nodes to
+the fused dequant-GEMM ``quant_matmul`` — no fp copy of any quantized
+weight is ever created, so resident weight memory is ~bits/32 of the
+fp32 model.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
 import dataclasses
+import shutil
+import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 
+from repro.checkpoint.packed import (load_packed_forward_params,
+                                     save_packed_artifact)
 from repro.configs import get_config
-from repro.core import RSQConfig, quantize_model
-from repro.core.quantizer import QuantSpec, quantize_weight_rtn
+from repro.core import RSQConfig, RSQPipeline
 from repro.data.synthetic import SyntheticCorpus
-from repro.kernels.quant_matmul.ops import pack_weight, quant_matmul
-from repro.launch.serve import generate
+from repro.launch.serve import generate, resident_weight_bytes
 from repro.models import build_model
 
 
@@ -29,29 +35,34 @@ def main():
     params = jax.jit(model.init)(jax.random.key(0))
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
     calib = corpus.sample(jax.random.key(1), 16, 64)
-    qparams, _ = quantize_model(
-        model, params, calib,
-        RSQConfig(bits=3, rotate=True, importance="attn_con"), batch_size=8)
+
+    # quantize + emit the packed serving artifact during write-back
+    pipe = RSQPipeline(model, RSQConfig(bits=4, rotate=True,
+                                        importance="attn_con",
+                                        pack_output=True))
+    qparams, _ = pipe.run(params, calib, batch_size=8)
+    artifact_dir = tempfile.mkdtemp(prefix="rsq_artifact_")
+    try:
+        save_packed_artifact(artifact_dir, pipe.artifact, params=qparams,
+                             extra={"arch": cfg.name})
+
+        # keep-packed serving: uint32 codes live in the param tree; every
+        # projection runs through quant_matmul
+        packed_params, meta = load_packed_forward_params(artifact_dir)
+    finally:
+        shutil.rmtree(artifact_dir, ignore_errors=True)
+    packed_b, fp_b = resident_weight_bytes(packed_params)
+    print(f"artifact: {len(meta['entries'])} packed weights "
+          f"(bits={meta['spec']['bits']}); resident bytes "
+          f"{packed_b / 1e6:.2f}MB packed + {fp_b / 1e6:.2f}MB fp residual")
 
     prompts = corpus.sample(jax.random.key(2), 4, 32)
-    for tag, p in (("fp32", params), ("rsq-3bit", qparams)):
+    for tag, p in (("fp32", params), ("rsq-4bit-keep-packed", packed_params)):
         t0 = time.time()
         out = generate(model, p, prompts, 16)
         jax.block_until_ready(out)
         print(f"{tag}: {out.shape[0] * out.shape[1]} tokens in "
               f"{time.time() - t0:.2f}s; sample {out[0][:8].tolist()}")
-
-    # the packed-kernel serving path for one projection (int4 example)
-    w = jax.tree.leaves(qparams["groups"])  # any quantized matrix
-    w = next(x for x in w if x.ndim == 3 and min(x.shape[1:]) >= 64)[0]
-    spec = QuantSpec(bits=4, group_size=32, sym=False)
-    _, q, s, z = quantize_weight_rtn(w, spec)
-    pw = pack_weight(q, s, z, spec)
-    x = jax.random.normal(jax.random.key(3), (8, w.shape[0]))
-    y = quant_matmul(x, pw)
-    print(f"packed int4 GEMM: x{tuple(x.shape)} @ W{tuple(w.shape)} -> "
-          f"{tuple(y.shape)}; weight bytes {pw.w_packed.nbytes} vs fp32 "
-          f"{w.nbytes} ({w.nbytes / pw.w_packed.nbytes:.1f}x smaller)")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 from repro.checkpoint.checkpoint import CheckpointManager  # noqa: F401
 from repro.checkpoint.packed import (  # noqa: F401
     load_packed_artifact,
+    load_packed_forward_params,
     load_packed_params,
     save_packed_artifact,
 )

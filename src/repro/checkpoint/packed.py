@@ -18,19 +18,25 @@ reloads that artifact:
   * **load** — shards are reassembled on host *in packed form* (host memory
     only ever holds compressed bytes + the small group params) and the fp
     weight first exists on device, via ``quantizer.dequantize_packed``
-    inside :func:`load_packed_params` — or never, when the consumer is the
-    ``quant_matmul`` kernel
-    (``kernels.quant_matmul.ops.packed_weight_from_artifact``).
+    inside :func:`load_packed_params` — or **never**, via
+    :func:`load_packed_forward_params`, which rebuilds the serving param
+    tree with every quantized matrix as a ``PackedWeight`` pytree node:
+    the codes stay packed in HBM and the model's ``linear`` dispatcher
+    feeds them straight to the ``quant_matmul`` kernel.
 
 On-disk layout (``<dir>/``):
 
   meta.json     — format tag, quant spec, per-entry metadata (d_in,
                   group_size, dtype, layer location) and the shard index
-                  map of every saved field
+                  map of every saved field — packed *and* residual
   packed.npz    — ``"<entry>/<field>@<k>"`` -> the k-th shard's local data
   residual.npz  — the unquantized remainder of the param tree (norms,
                   routers, embeddings, ...) with quantized leaves replaced
-                  by empty markers; treedef pickled in meta.json
+                  by empty markers; written per addressable shard exactly
+                  like the packed leaves (``"leaf_<i>@<k>"`` + shard index
+                  in meta.json), so a d_out/vocab-sharded residual leaf
+                  never gathers on the controller; treedef pickled in
+                  meta.json
 """
 from __future__ import annotations
 
@@ -45,8 +51,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantizer import dequantize_packed
+from repro.kernels.quant_matmul.ops import PackedWeight
+from repro.runtime.sharding import LOCAL, ParallelCtx
 
-FORMAT = "rsq-packed-v1"
+FORMAT = "rsq-packed-v2"  # v2: residual leaves are shard-indexed like codes
+_READABLE = (FORMAT, "rsq-packed-v1")  # v1 differs only in residual layout
 _FIELDS = ("codes", "scale", "zero")
 
 
@@ -77,32 +86,48 @@ def _shard_items(x) -> list[tuple[list[list[int]], np.ndarray]]:
     return items
 
 
+def _save_field(arrays: dict, key: str, x) -> dict:
+    """Append ``x`` to the write buffer one addressable shard at a time;
+    returns the field's shard-index metadata for meta.json."""
+    shards = _shard_items(x)
+    for k, (idx, data) in enumerate(shards):
+        arrays[f"{key}@{k}"] = data
+    return {
+        "shape": [int(s) for s in x.shape],
+        "dtype": str(np.dtype(shards[0][1].dtype)),
+        "shards": [idx for idx, _ in shards],
+    }
+
+
+def _assemble_field(z, key: str, fm: dict) -> np.ndarray:
+    out = np.empty(tuple(fm["shape"]), np.dtype(fm["dtype"]))
+    for k, idx in enumerate(fm["shards"]):
+        sl = tuple(slice(lo, hi) for lo, hi in idx)
+        out[sl] = z[f"{key}@{k}"]
+    return out
+
+
 def save_packed_artifact(directory, artifact: dict, *,
                          params: Any = None, extra: dict | None = None,
                          ) -> Path:
     """Persist a pipeline artifact (``RSQPipeline.artifact``) to ``dir``.
 
     ``params``: the quantized param tree; its quantized leaves are replaced
-    by empty markers and the remainder is stored as the fp residual so
-    :func:`load_packed_params` can reconstruct a complete model.
-    """
+    by empty markers and the remainder is stored as the fp residual so the
+    loaders can reconstruct a complete model.  Residual leaves are written
+    through the same per-addressable-shard path as the packed leaves — a
+    vocab-sharded embedding or d_out-sharded router is never gathered into
+    one controller buffer."""
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     arrays: dict[str, np.ndarray] = {}
     meta_entries: dict[str, dict] = {}
     for name, entry in artifact["entries"].items():
         em = dict(artifact["meta"][name])
-        em["fields"] = {}
-        for field in _FIELDS:
-            x = entry[field]
-            shards = _shard_items(x)
-            for k, (idx, data) in enumerate(shards):
-                arrays[f"{name}/{field}@{k}"] = data
-            em["fields"][field] = {
-                "shape": [int(s) for s in x.shape],
-                "dtype": str(np.dtype(shards[0][1].dtype)),
-                "shards": [idx for idx, _ in shards],
-            }
+        em["fields"] = {
+            field: _save_field(arrays, f"{name}/{field}", entry[field])
+            for field in _FIELDS
+        }
         meta_entries[name] = em
 
     meta = {"format": FORMAT, "spec": artifact["spec"],
@@ -110,10 +135,15 @@ def save_packed_artifact(directory, artifact: dict, *,
     if params is not None:
         residual = _strip_quantized(params, meta_entries)
         leaves, treedef = jax.tree_util.tree_flatten(residual)
-        np.savez(d / "residual.npz",
-                 **{f"leaf_{i}": np.asarray(jax.device_get(l))
-                    for i, l in enumerate(leaves)})
+        res_arrays: dict[str, np.ndarray] = {}
+        meta["residual_leaves"] = [
+            _save_field(res_arrays, f"leaf_{i}", leaf)
+            for i, leaf in enumerate(leaves)
+        ]
         meta["residual_treedef"] = pickle.dumps(treedef).hex()
+        tmp = d / "residual.tmp.npz"
+        np.savez(tmp, **res_arrays)
+        os.rename(tmp, d / "residual.npz")
     tmp = d / "packed.tmp.npz"  # savez appends .npz to other suffixes
     np.savez(tmp, **arrays)
     os.rename(tmp, d / "packed.npz")
@@ -157,14 +187,8 @@ def _strip_quantized(params: Any, meta_entries: dict) -> Any:
 
 
 def _assemble_entry(z, name: str, em: dict) -> dict:
-    entry = {}
-    for field, fm in em["fields"].items():
-        out = np.empty(tuple(fm["shape"]), np.dtype(fm["dtype"]))
-        for k, idx in enumerate(fm["shards"]):
-            sl = tuple(slice(lo, hi) for lo, hi in idx)
-            out[sl] = z[f"{name}/{field}@{k}"]
-        entry[field] = out
-    return entry
+    return {field: _assemble_field(z, f"{name}/{field}", fm)
+            for field, fm in em["fields"].items()}
 
 
 def load_packed_artifact(directory) -> tuple[dict, dict]:
@@ -174,7 +198,9 @@ def load_packed_artifact(directory) -> tuple[dict, dict]:
     caller's (device-side) concern."""
     d = Path(directory)
     meta = json.loads((d / "meta.json").read_text())
-    assert meta["format"] == FORMAT, meta["format"]
+    assert meta["format"] in _READABLE, \
+        f"unreadable artifact format {meta['format']!r}; " \
+        f"re-run launch.quantize --pack-out (readable: {_READABLE})"
     with np.load(d / "packed.npz") as z:
         entries = {name: _assemble_entry(z, name, em)
                    for name, em in meta["entries"].items()}
@@ -187,7 +213,9 @@ def load_packed_entry(directory, name: str) -> dict:
     against a large artifact)."""
     d = Path(directory)
     meta = json.loads((d / "meta.json").read_text())
-    assert meta["format"] == FORMAT, meta["format"]
+    assert meta["format"] in _READABLE, \
+        f"unreadable artifact format {meta['format']!r}; " \
+        f"re-run launch.quantize --pack-out (readable: {_READABLE})"
     with np.load(d / "packed.npz") as z:
         return _assemble_entry(z, name, meta["entries"][name])
 
@@ -201,39 +229,114 @@ def dequantize_entry(entry: dict, em: dict, spec: dict) -> jax.Array:
     return w.astype(em.get("dtype", "float32"))
 
 
-def load_packed_params(directory) -> tuple[Any, dict]:
-    """-> (params, meta): a complete param tree for serving.
-
-    The fp residual loads as saved; every quantized weight is rebuilt on
-    device from its packed entry (group layers re-stack their per-layer
-    entries along the stacked axis) — the unpacked weight never exists on
-    host."""
+def _load_residual(directory, meta: dict) -> Any:
+    """Reassemble the fp residual tree from its per-shard members
+    (v1 artifacts stored each leaf whole — load those as-is)."""
     d = Path(directory)
-    entries, meta = load_packed_artifact(d)
     with np.load(d / "residual.npz") as z:
-        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+        if "residual_leaves" in meta:
+            leaves = [_assemble_field(z, f"leaf_{i}", fm)
+                      for i, fm in enumerate(meta["residual_leaves"])]
+        else:  # rsq-packed-v1
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
     treedef = pickle.loads(bytes.fromhex(meta["residual_treedef"]))
-    params = jax.tree_util.tree_unflatten(treedef, leaves)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
+
+def _stacked_slots(params: Any, meta: dict):
+    """Group artifact entries by their target leaf: yields
+    ``(node, leaf, em, per_layer)`` where ``per_layer`` maps the stacked
+    layer index (or None for a plain leaf) to that layer's entry name."""
     def stack_key(em) -> tuple:
         o = em["loc"][2] if em["loc"][0] == "groups" else 0
         return (em["loc"][0], o, em["path"])
 
-    stacked: dict[tuple, dict[int, jax.Array]] = {}
+    stacked: dict[tuple, dict[int, str]] = {}
     stacked_em: dict[tuple, dict] = {}
     for name, em in meta["entries"].items():
-        w = dequantize_entry(entries[name], em, meta["spec"])
         node, leaf, g = _leaf_slot(params, em)
         if g is None:
-            node[leaf] = w
+            yield node, leaf, em, {None: name}
         else:
-            stacked.setdefault(stack_key(em), {})[g] = w
+            stacked.setdefault(stack_key(em), {})[g] = name
             stacked_em[stack_key(em)] = em
     for key, per_layer in stacked.items():
         n = max(per_layer) + 1
         assert sorted(per_layer) == list(range(n)), \
             f"artifact is missing layers for {key}: {sorted(per_layer)}"
-        node, leaf, _ = _leaf_slot(params, stacked_em[key])
-        node[leaf] = jnp.stack([per_layer[g] for g in range(n)])
+        em = stacked_em[key]
+        node, leaf, _ = _leaf_slot(params, em)
+        yield node, leaf, em, {g: per_layer[g] for g in range(n)}
+
+
+def load_packed_params(directory) -> tuple[Any, dict]:
+    """-> (params, meta): a complete *dequantized* param tree for serving.
+
+    The fp residual loads as saved; every quantized weight is rebuilt on
+    device from its packed entry (group layers re-stack their per-layer
+    entries along the stacked axis) — the unpacked weight never exists on
+    host.  For packed-in-HBM serving (no fp weight anywhere) use
+    :func:`load_packed_forward_params` instead."""
+    d = Path(directory)
+    entries, meta = load_packed_artifact(d)
+    params = _load_residual(d, meta)
+    for node, leaf, em, per_layer in _stacked_slots(params, meta):
+        ws = [dequantize_entry(entries[per_layer[g]], em, meta["spec"])
+              for g in sorted(per_layer, key=lambda g: -1 if g is None else g)]
+        node[leaf] = ws[0] if None in per_layer else jnp.stack(ws)
+    params = jax.tree.map(jnp.asarray, params)
+    return params, meta
+
+
+def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL,
+                               ) -> tuple[Any, dict]:
+    """-> (params, meta): serving params with the codes *kept packed in HBM*.
+
+    Every quantized matrix lands in the tree as a ``PackedWeight`` pytree
+    node (uint32 codes + per-group scale/zero; static quant geometry as
+    aux data) that the model's ``linear`` dispatcher routes through the
+    fused dequant-GEMM ``quant_matmul``.  No fp array of any quantized
+    weight's full shape is ever created — not on host (shards reassemble
+    in packed form) and not on device (the kernel dequantizes tile-wise
+    in VMEM), with one exception: MLA's absorbed decode contracts
+    ``wkv_b`` per-head and dequantizes it transiently inside the step
+    trace (``models.attention._materialize``).  Resident weight HBM is
+    therefore ~bits/16 of the bf16 model (bits/32 of fp32) plus the
+    small group params.
+
+    Stacked layer groups re-stack per-layer *codes* along the leading
+    axis, so the stacked ``PackedWeight`` rides the model's ``lax.scan``
+    unchanged; expert entries keep their leading (E,) axis and dispatch
+    through the vmapped kernel.  With a live mesh ``ctx``, codes / scale /
+    zero are placed d_out-sharded on the model axis (the decode-serving
+    layout: output-dim sharded weights, no per-token weight gathers)."""
+    d = Path(directory)
+    entries, meta = load_packed_artifact(d)
+    params = _load_residual(d, meta)
+    spec = meta["spec"]
+
+    def put(a: np.ndarray) -> tuple[jax.Array, bool]:
+        a = jnp.asarray(a)
+        if (ctx.enabled and ctx.tp
+                and a.shape[-1] % ctx.axis_size("tp") == 0):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            sh = NamedSharding(ctx.mesh, P(*([None] * (a.ndim - 1)), ctx.tp))
+            return jax.device_put(a, sh), ctx.axis_size("tp") > 1
+        return a, False
+
+    for node, leaf, em, per_layer in _stacked_slots(params, meta):
+        order = sorted(per_layer, key=lambda g: -1 if g is None else g)
+        fields = {}
+        for f in _FIELDS:
+            per = [entries[per_layer[g]][f] for g in order]
+            fields[f] = per[0] if None in per_layer else np.stack(per)
+        codes, sharded = put(fields["codes"])
+        node[leaf] = PackedWeight(
+            w_packed=codes, scale=put(fields["scale"])[0],
+            zero=put(fields["zero"])[0], bits=int(spec["bits"]),
+            group_size=int(em["group_size"]), d_in=int(em["d_in"]),
+            # partitioned codes must take the GSPMD-partitionable ref GEMM,
+            # not the opaque Pallas call (see PackedWeight.mesh_sharded)
+            mesh_sharded=sharded)
     params = jax.tree.map(jnp.asarray, params)
     return params, meta

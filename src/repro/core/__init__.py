@@ -1,13 +1,40 @@
-"""RSQ (Rotate, Scale, then Quantize) — the paper's primary contribution."""
-from repro.core.gptq import gptq_quantize, gptq_quantize_ref  # noqa: F401
-from repro.core.importance import STRATEGIES, get_strategy  # noqa: F401
-from repro.core.pipeline import RSQConfig, RSQPipeline, quantize_model  # noqa: F401
+"""RSQ (Rotate, Scale, then Quantize) — the paper's primary contribution.
+
+Public names resolve lazily (PEP 562): the model zoo now imports
+``repro.core.quantizer`` (via ``kernels.quant_matmul``'s ``PackedWeight``),
+so eagerly importing the pipeline here — which itself imports the model
+zoo — would be a circular import.  ``from repro.core import RSQConfig``
+and friends keep working unchanged.
+"""
+import importlib
+
 from repro.core.quantizer import QuantSpec, quantize_weight_rtn  # noqa: F401
-from repro.core.rotation import random_hadamard, rotate_model  # noqa: F401
-from repro.core.scheduler import (  # noqa: F401
-    SCHEDULERS,
-    LayerScheduler,
-    OverlappedScheduler,
-    SequentialScheduler,
-    get_scheduler,
-)
+
+_LAZY = {
+    "gptq_quantize": "repro.core.gptq",
+    "gptq_quantize_ref": "repro.core.gptq",
+    "STRATEGIES": "repro.core.importance",
+    "get_strategy": "repro.core.importance",
+    "RSQConfig": "repro.core.pipeline",
+    "RSQPipeline": "repro.core.pipeline",
+    "quantize_model": "repro.core.pipeline",
+    "random_hadamard": "repro.core.rotation",
+    "rotate_model": "repro.core.rotation",
+    "SCHEDULERS": "repro.core.scheduler",
+    "LayerScheduler": "repro.core.scheduler",
+    "OverlappedScheduler": "repro.core.scheduler",
+    "SequentialScheduler": "repro.core.scheduler",
+    "get_scheduler": "repro.core.scheduler",
+}
+
+__all__ = ["QuantSpec", "quantize_weight_rtn", *_LAZY]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

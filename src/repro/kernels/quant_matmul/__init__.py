@@ -1,1 +1,7 @@
-from repro.kernels.quant_matmul.ops import quant_matmul  # noqa: F401
+from repro.kernels.quant_matmul.ops import (  # noqa: F401
+    PackedWeight,
+    is_packed,
+    pack_weight,
+    packed_weight_from_artifact,
+    quant_matmul,
+)

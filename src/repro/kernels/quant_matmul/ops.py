@@ -1,10 +1,27 @@
 """Public wrapper: weight-only quantized GEMM for serving.
 
-Use ``pack_weight`` once offline (after the RSQ pipeline), then
-``quant_matmul(x, packed)`` at serving time.  Only power-of-two bit widths
-ride the packed kernel (int3 packing wastes 2 bits/word and breaks the
-k-tiling alignment; 3-bit deployments dequantize via ref — documented in
-DESIGN.md)."""
+``PackedWeight`` is the serving-side parameter type for a quantized dense
+projection: a registered JAX pytree whose leaves are the packed uint32
+codes plus the per-group ``(scale, zero)`` and whose aux data carries the
+static quant geometry ``(bits, group_size, d_in)``.  Because it is a
+pytree it drops into a param tree anywhere an fp ``(d_in, d_out)`` matrix
+used to live — ``jax.jit``/``lax.scan``/``jax.vmap`` trace straight
+through it (a stacked group of layers is simply a ``PackedWeight`` whose
+leaves carry a leading layer axis, sliced by the scan like any other
+param), and the model's ``linear`` dispatcher
+(``models.layers.linear``) routes it through :func:`quant_matmul` instead
+of ``x @ w``.
+
+Use ``pack_weight`` once offline (after the RSQ pipeline), or build one
+straight from a packed serving artifact with
+``packed_weight_from_artifact``; then ``quant_matmul(x, packed)`` at
+serving time.  Only power-of-two bit widths ride the packed kernel (int3
+packing wastes 2 bits/word and breaks the k-tiling alignment; 3-bit
+deployments dequantize via ref — documented in DESIGN.md).  Decode-shape
+inputs (m = batch, not a sublane multiple of 8) are padded up to 8 inside
+the wrapper and the output sliced back, so single-token decode stays on
+the Pallas kernel instead of bouncing to the slow ref path.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -21,19 +38,57 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class PackedWeight:
+    """Packed quantized projection: pytree leaves (w_packed, scale, zero),
+    static aux (bits, group_size, d_in).
+
+    ``w_packed``: (..., d_in // vpw, d_out) uint32; ``scale``/``zero``:
+    (..., d_in // group_size, d_out).  Leading batch axes (stacked layer
+    groups, expert stacks) are carried by the leaves and stay invisible to
+    the static aux — exactly what lets a stacked ``PackedWeight`` ride a
+    ``lax.scan`` over layers or a ``jax.vmap`` over experts."""
+
     w_packed: jax.Array  # (k // vpw, n) uint32
     scale: jax.Array  # (k // gs, n)
     zero: jax.Array
     bits: int
     group_size: int
     d_in: int
+    # codes are partitioned across a live mesh (set by
+    # checkpoint.packed.load_packed_forward_params): the Pallas kernel is
+    # an opaque custom call GSPMD would service by all-gathering the full
+    # codes per device, so mesh-sharded weights stay on the jnp ref,
+    # which partitions like any GEMM.  A shard_map-wrapped kernel (the
+    # gram-kernel precedent) is the recorded ROADMAP follow-up.
+    mesh_sharded: bool = False
+
+    def tree_flatten_with_keys(self):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(f), getattr(self, f))
+            for f in ("w_packed", "scale", "zero"))
+        return children, (self.bits, self.group_size, self.d_in,
+                          self.mesh_sharded)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident HBM bytes of the packed representation."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.w_packed, self.scale, self.zero))
+
+
+def is_packed(w) -> bool:
+    return isinstance(w, PackedWeight)
 
 
 def pack_weight(q: jax.Array, scale: jax.Array, zero: jax.Array,
                 spec: QuantSpec) -> PackedWeight:
-    d_in = q.shape[0]
+    d_in = q.shape[-2]
     gs = d_in if spec.group_size == -1 else spec.group_size
     return PackedWeight(
         w_packed=pack_codes(q, spec.bits), scale=scale, zero=zero,
@@ -47,37 +102,66 @@ def packed_weight_from_artifact(entry: dict, em: dict,
     The codes move host->device still packed and ``quant_matmul`` consumes
     them directly — the serving path never unpacks on host.  ``entry`` is
     one ``load_packed_artifact`` entry, ``em``/``spec`` its per-entry and
-    artifact-level metadata."""
+    artifact-level metadata.  Expert stacks arrive with a leading (E,)
+    axis on every leaf and dispatch through the vmapped kernel
+    (``models.layers.linear``)."""
     codes = jnp.asarray(entry["codes"])
-    assert codes.ndim == 2, "quant_matmul serves dense 2-D weights " \
-        f"(expert stacks dequantize via checkpoint.packed): {codes.shape}"
+    assert codes.ndim in (2, 3), \
+        f"dense (k/vpw, n) or expert-stacked (E, k/vpw, n) codes: {codes.shape}"
     return PackedWeight(
         w_packed=codes, scale=jnp.asarray(entry["scale"]),
         zero=jnp.asarray(entry["zero"]), bits=int(spec["bits"]),
         group_size=int(em["group_size"]), d_in=int(em["d_in"]))
 
 
-def quant_matmul(x: jax.Array, pw: PackedWeight) -> jax.Array:
+def quant_matmul(x: jax.Array, pw: PackedWeight, *,
+                 use_kernel: bool | None = None) -> jax.Array:
+    """y = x @ dequant(pw).  x: (m, k) -> (m, n), fp32 accumulation.
+
+    Decode shapes (m not a multiple of the 8-row sublane tile) are padded
+    up to 8 and the output sliced back — a single generated token per
+    sequence must not demote the GEMM to the unfused ref path, since the
+    packed kernel's 16/bits HBM-traffic win is exactly what decode (a
+    memory-bound shape) is serving for.
+
+    ``use_kernel``: None (default) auto-selects the Pallas kernel on TPU
+    for unsharded weights and the jnp ref elsewhere — the same policy as
+    the gram kernel (``RSQConfig.use_gram_kernel``): off-TPU the kernel
+    only runs in interpret mode, a correctness tool that would serialize
+    the serving hot loop, and mesh-sharded codes (``pw.mesh_sharded``)
+    must not hit an opaque custom call GSPMD would all-gather.  The ref
+    is a fused XLA unpack+dequant+matmul on the same packed codes —
+    resident HBM stays packed either way."""
     m, k = x.shape
     vpw = 32 // pw.bits
     aligned = (32 % pw.bits == 0 and pw.d_in % vpw == 0
-               and k % 128 == 0 and pw.w_packed.shape[1] % 128 == 0
-               and m % 8 == 0)
-    if not aligned or pw.bits == 3:
+               and k % 128 == 0 and pw.w_packed.shape[1] % 128 == 0)
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and not pw.mesh_sharded)
+    # the k tile must divide k and contain whole quant groups; when no
+    # power-of-two tile <= 512 does both (per-tensor groups with a large
+    # d_in, group_size > 512, non-power-of-two groups) the kernel can't
+    # tile the reduction — serve via ref like the 3-bit case
+    k_blk = 512
+    while k_blk and (k % k_blk or k_blk % pw.group_size):
+        k_blk //= 2
+    if not (aligned and use_kernel and k_blk) or pw.bits == 3:
         return quant_matmul_ref(x, pw.w_packed, pw.scale, pw.zero,
                                 bits=pw.bits, group_size=pw.group_size,
                                 d_in=pw.d_in)
-    k_blk = 512
-    while k % k_blk or k_blk % pw.group_size:
-        k_blk //= 2
+    m_pad = (-m) % 8
+    if m_pad:
+        x = jnp.concatenate([x, jnp.zeros((m_pad, k), x.dtype)], axis=0)
     m_blk = 128
-    while m % m_blk:
+    while x.shape[0] % m_blk:
         m_blk //= 2
     n = pw.w_packed.shape[1]
     n_blk = 256
     while n % n_blk:
         n_blk //= 2
-    return quant_matmul_pallas(
+    out = quant_matmul_pallas(
         x, pw.w_packed, pw.scale, pw.zero, bits=pw.bits,
         group_size=pw.group_size, m_blk=m_blk, n_blk=n_blk, k_blk=k_blk,
         interpret=_interpret())
+    return out[:m] if m_pad else out

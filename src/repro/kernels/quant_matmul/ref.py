@@ -1,4 +1,15 @@
-"""Pure-jnp oracle: unpack + dequantize + matmul."""
+"""Pure-jnp oracle: unpack + dequantize + matmul.
+
+Off-TPU this *is* the serving path (``quant_matmul`` auto-selects it, the
+Pallas kernel only runs interpret-mode there), so it matters that its
+peak intermediate stays at the (k, n) fp32 dequantized weight — the same
+footprint as the old load-time-dequant serving path — and never grows
+with the token count: the per-group (scale, zero) are applied by
+broadcasting over a (g, group_size, n) view of the codes (no
+materialized ``jnp.repeat`` of the group params to (k, n), and no
+token-dependent (m, g, n) partial-product blowup), followed by one plain
+matmul that XLA partitions/fuses like any other GEMM.
+"""
 from __future__ import annotations
 
 import jax
@@ -11,8 +22,10 @@ def quant_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
                      zero: jax.Array, *, bits: int, group_size: int,
                      d_in: int | None = None) -> jax.Array:
     k = d_in if d_in is not None else x.shape[-1]
-    codes = unpack_codes(w_packed, bits, k).astype(jnp.float32)
-    s = jnp.repeat(scale.astype(jnp.float32), group_size, axis=0)[:k]
-    z = jnp.repeat(zero.astype(jnp.float32), group_size, axis=0)[:k]
-    w = s * (codes - z)
+    n = w_packed.shape[-1]
+    g = scale.shape[-2]
+    assert g * group_size == k, (g, group_size, k)
+    codes = unpack_codes(w_packed, bits, k).astype(jnp.float32)  # (k, n)
+    wg = (codes.reshape(g, group_size, n) - zero.astype(jnp.float32)[:, None])
+    w = (wg * scale.astype(jnp.float32)[:, None]).reshape(k, n)
     return (x.astype(jnp.float32) @ w).astype(x.dtype)

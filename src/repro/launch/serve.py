@@ -5,11 +5,26 @@ weight-only quantized execution (RSQ output + quant_matmul kernel).
       --batch 4 --prompt-len 32 --gen 16
 
 ``--packed DIR`` serves from a packed RSQ artifact (written by
-launch.quantize --pack-out): host memory only ever holds the packed int
-codes + group scales; every fp weight is reconstructed on device
-(``checkpoint.packed.load_packed_params``), and ``--kernel-check``
-additionally runs one projection through the ``quant_matmul`` kernel
-straight from the packed codes (no unpacking anywhere on host).
+launch.quantize --pack-out).  The default is **keep-packed** serving
+(``--keep-packed``): the param tree holds the uint32 codes as
+``PackedWeight`` pytree nodes and every dense projection runs through the
+fused dequant-GEMM ``quant_matmul`` — no fp array of any quantized
+weight's full shape is ever created, on host or in HBM (one exception:
+MLA's absorbed decode dequantizes ``wkv_b`` transiently per step inside
+the trace — ``models.attention._materialize``), so resident weight
+memory is ~bits/16 of the bf16 model.  ``--no-keep-packed``
+restores the legacy load-time device-side dequantization
+(``checkpoint.packed.load_packed_params``) for A/B comparisons; both
+paths jit prefill and decode through the same model code
+(``models.layers.linear`` dispatches per weight type).
+
+``--kernel-check`` is deprecated: the keep-packed forward now routes
+*every* projection through ``quant_matmul`` and the full-forward parity
+is pinned by tests/test_serve_packed.py.  The flag survives as a thin
+alias that still runs its original cheap startup integrity check (one
+artifact entry through ``quant_matmul`` vs the dequantized matmul)
+before keep-packed serving; combining it with ``--no-keep-packed`` is an
+error.
 """
 from __future__ import annotations
 
@@ -49,11 +64,26 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
     return jnp.concatenate(toks, axis=1)
 
 
-def _kernel_check(packed_dir: str, meta: dict) -> None:
-    """Drive ``quant_matmul`` straight from packed artifact codes and
-    cross-check against the on-device dequantized matmul.  Loads just the
-    one entry it checks (the full artifact was already loaded for params).
-    """
+def resident_weight_bytes(params) -> tuple[int, int]:
+    """(packed_bytes, fp_bytes) resident in the tree: bytes held by
+    ``PackedWeight`` leaves vs plain fp leaves."""
+    from repro.kernels.quant_matmul.ops import PackedWeight
+
+    packed = fp = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedWeight)):
+        if isinstance(leaf, PackedWeight):
+            packed += leaf.nbytes
+        else:
+            fp += leaf.size * leaf.dtype.itemsize
+    return packed, fp
+
+
+def _kernel_spot_check(packed_dir: str, meta: dict) -> None:
+    """One artifact entry through ``quant_matmul`` vs its dequantized
+    matmul — the deprecated ``--kernel-check`` startup integrity check
+    (a corrupt/stale artifact fails loudly before serving; the full
+    per-projection parity lives in tests/test_serve_packed.py)."""
     from repro.checkpoint.packed import dequantize_entry, load_packed_entry
     from repro.kernels.quant_matmul.ops import (packed_weight_from_artifact,
                                                 quant_matmul)
@@ -85,34 +115,49 @@ def main(argv=None):
     ap.add_argument("--packed", default=None, metavar="DIR",
                     help="serve from a packed RSQ artifact (written by "
                     "launch.quantize --pack-out): weights travel host->"
-                    "device as packed int codes and dequantize on device")
+                    "device as packed int codes")
+    ap.add_argument("--keep-packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="with --packed: keep codes packed in HBM and run "
+                    "every dense projection through quant_matmul (default); "
+                    "--no-keep-packed dequantizes whole weights on device "
+                    "at load time instead")
     ap.add_argument("--kernel-check", action="store_true",
-                    help="with --packed: also run one projection through "
-                    "the quant_matmul kernel directly from the packed codes")
+                    help="deprecated: keep-packed serving (the default) "
+                    "already runs every projection through quant_matmul "
+                    "(full-forward parity lives in tests/test_serve_packed); "
+                    "retained as a one-entry startup integrity check")
     args = ap.parse_args(argv)
-    if args.kernel_check and not args.packed:
-        ap.error("--kernel-check requires --packed (it drives the kernel "
-                 "from the packed artifact's codes)")
+    if args.kernel_check:
+        if not args.packed:
+            ap.error("--kernel-check requires --packed")
+        if not args.keep_packed:
+            ap.error("--kernel-check checks the keep-packed path; it "
+                     "cannot be combined with --no-keep-packed")
+        print("--kernel-check is deprecated: keep-packed serving (the "
+              "default) routes every projection through quant_matmul; "
+              "running the one-entry startup check anyway")
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
     model = build_model(cfg)
     if args.packed:
-        from repro.checkpoint.packed import load_packed_params
+        from repro.checkpoint.packed import (load_packed_forward_params,
+                                             load_packed_params)
 
-        params, meta = load_packed_params(args.packed)
+        loader = (load_packed_forward_params if args.keep_packed
+                  else load_packed_params)
+        params, meta = loader(args.packed)
         arch = meta.get("extra", {}).get("arch")
         assert arch in (None, args.arch), \
             f"artifact was quantized for --arch {arch}, serving {args.arch}"
-        import math
-
         n_packed = len(meta["entries"])
-        packed_mb = sum(
-            math.prod(em["fields"]["codes"]["shape"]) * 4
-            for em in meta["entries"].values()) / 1e6
-        print(f"packed artifact: {n_packed} weights, codes {packed_mb:.1f}MB "
-              f"(bits={meta['spec']['bits']})")
+        packed_b, fp_b = resident_weight_bytes(params)
+        mode = "keep-packed" if args.keep_packed else "dequantized"
+        print(f"packed artifact: {n_packed} weights ({mode}, "
+              f"bits={meta['spec']['bits']}); resident bytes: "
+              f"{packed_b / 1e6:.1f}MB packed + {fp_b / 1e6:.1f}MB fp")
         if args.kernel_check:
-            _kernel_check(args.packed, meta)
+            _kernel_spot_check(args.packed, meta)
     else:
         params = jax.jit(model.init)(jax.random.key(args.seed))
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)

@@ -14,9 +14,26 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.core.quantizer import dequantize_packed
+from repro.kernels.quant_matmul.ops import is_packed
+from repro.models.layers import apply_rope, dense_init, linear, rms_norm
 
 NEG_INF = -1e30
+
+
+def _materialize(w):
+    """fp view of a projection weight, for math that contracts the weight
+    per-head instead of as a plain GEMM (MLA's absorbed decode).
+
+    For a ``PackedWeight`` this dequantizes *inside the jitted step* — a
+    transient VMEM/HBM tile of the decode trace, not a resident fp copy in
+    the params pytree; every other projection in the module stays on the
+    packed ``quant_matmul`` path via ``linear``."""
+    if is_packed(w):
+        assert w.w_packed.ndim == 2, w.w_packed.shape
+        return dequantize_packed(w.w_packed, w.scale, w.zero,
+                                 bits=w.bits, d_in=w.d_in)
+    return w
 
 
 def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
@@ -197,9 +214,9 @@ def init_gqa(key, cfg, dtype):
 def gqa_qkv(p, cfg, x, positions, *, rope: bool = True):
     b, t, _ = x.shape
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)
-    k = x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)
-    v = x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)
+    q = linear(x, p["wq"]) + (p["bq"] if "bq" in p else 0.0)
+    k = linear(x, p["wk"]) + (p["bk"] if "bk" in p else 0.0)
+    v = linear(x, p["wv"]) + (p["bv"] if "bv" in p else 0.0)
     q = q.reshape(b, t, h, dh)
     k = k.reshape(b, t, kvh, dh)
     v = v.reshape(b, t, kvh, dh)
@@ -218,7 +235,7 @@ def apply_gqa(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
         out, col = res
     else:
         out, col = res, None
-    y = out.reshape(b, t, -1) @ p["wo"]
+    y = linear(out.reshape(b, t, -1), p["wo"])
     return (y, col) if colsum else y
 
 
@@ -252,18 +269,18 @@ def mla_qkv(p, cfg, x, positions):
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     if "wq_a" in p:
-        ql = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
-        q = (ql @ p["wq_b"]).reshape(b, t, h, dn + dr)
+        ql = rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = linear(ql, p["wq_b"]).reshape(b, t, h, dn + dr)
     else:
-        q = (x @ p["wq"]).reshape(b, t, h, dn + dr)
+        q = linear(x, p["wq"]).reshape(b, t, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    kv = x @ p["wkv_a"]  # (B, T, kvr + dr)
+    kv = linear(x, p["wkv_a"])  # (B, T, kvr + dr)
     c_kv = rms_norm(kv[..., :kvr], p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(kv[..., None, kvr:], positions, cfg.rope_theta)  # 1 head
-    kvb = (c_kv @ p["wkv_b"]).reshape(b, t, h, dn + dv)
+    kvb = linear(c_kv, p["wkv_b"]).reshape(b, t, h, dn + dv)
     k_nope, v = kvb[..., :dn], kvb[..., dn:]
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope, (b, t, h, dr))], axis=-1
@@ -280,7 +297,7 @@ def apply_mla(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
         out, col = res
     else:
         out, col = res, None
-    y = out.reshape(b, t, -1) @ p["wo"]
+    y = linear(out.reshape(b, t, -1), p["wo"])
     return (y, col) if colsum else y
 
 
@@ -288,19 +305,25 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
     """Latent-space ("absorbed") MLA decode: the KV cache stores only the
     compressed c_kv (kvr) + shared rope key (dr) per token.
 
-    x: (B, 1, D); c_cache: (B, S, kvr); rope_cache: (B, S, dr)."""
+    x: (B, 1, D); c_cache: (B, S, kvr); rope_cache: (B, S, dr).
+
+    The absorbed trick contracts ``wkv_b`` per-head (two einsums against
+    the latent cache) rather than as one GEMM, so a packed ``wkv_b``
+    dequantizes transiently inside this step's trace (``_materialize``) —
+    the one documented exception to the fully-packed decode path; the q
+    and output projections stay on ``quant_matmul`` via ``linear``."""
     b, _, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     if "wq_a" in p:
-        ql = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
-        q = (ql @ p["wq_b"]).reshape(b, 1, h, dn + dr)
+        ql = rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = linear(ql, p["wq_b"]).reshape(b, 1, h, dn + dr)
     else:
-        q = (x @ p["wq"]).reshape(b, 1, h, dn + dr)
+        q = linear(x, p["wq"]).reshape(b, 1, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
-    wkv_b = p["wkv_b"].reshape(kvr, h, dn + dv)
+    wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
     w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
     # absorb W_k into q: (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
     q_lat = jnp.einsum("bthd,khd->bthk", q_nope.astype(jnp.float32),
@@ -316,7 +339,7 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
     prob = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bths,bsk->bthk", prob, c_cache.astype(jnp.float32))
     ctx = jnp.einsum("bthk,khd->bthd", ctx_lat, w_v.astype(jnp.float32))
-    y = ctx.reshape(b, 1, h * dv).astype(x.dtype) @ p["wo"]
+    y = linear(ctx.reshape(b, 1, h * dv).astype(x.dtype), p["wo"])
     return y
 
 
@@ -339,8 +362,8 @@ def init_cross_attn(key, cfg, dtype):
 def cross_kv(p, cfg, media):
     b, tm, _ = media.shape
     kvh, dh = cfg.n_kv_heads, cfg.head_dim
-    k = (media @ p["wk"]).reshape(b, tm, kvh, dh)
-    v = (media @ p["wv"]).reshape(b, tm, kvh, dh)
+    k = linear(media, p["wk"]).reshape(b, tm, kvh, dh)
+    v = linear(media, p["wv"]).reshape(b, tm, kvh, dh)
     return k, v
 
 
@@ -348,10 +371,10 @@ def apply_cross_attn(p, cfg, x, media=None, kv=None, kv_chunk=512):
     """media: (B, Tm, D) stub embeddings; or precomputed kv (decode path)."""
     b, t, _ = x.shape
     h, dh = cfg.n_heads, cfg.head_dim
-    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    q = linear(x, p["wq"]).reshape(b, t, h, dh)
     if kv is None:
         kv = cross_kv(p, cfg, media)
     k, v = kv
     out = flash_attention(q, k, v, causal=False,
                           kv_chunk=min(kv_chunk, k.shape[1]))
-    return out.reshape(b, t, -1) @ p["wo"]
+    return linear(out.reshape(b, t, -1), p["wo"])

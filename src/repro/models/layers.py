@@ -1,12 +1,44 @@
-"""Shared primitives: RMSNorm, RoPE, SwiGLU FFN, inits.
+"""Shared primitives: RMSNorm, RoPE, the ``linear`` projection dispatcher,
+SwiGLU FFN, inits.
 
-Conventions: weights are ``(in, out)``; forward is ``y = x @ W (+ b)``.
+Conventions: weights are ``(in, out)``; forward is ``y = linear(x, W) (+ b)``.
 Norm/softmax math runs in fp32 regardless of activation dtype.
+
+``linear`` is the single seam between the model zoo and the weight
+representation: an fp array multiplies as ``x @ w``; a
+``kernels.quant_matmul.PackedWeight`` (packed-in-HBM quantized serving
+params, ``checkpoint.packed.load_packed_forward_params``) routes through
+the fused dequant-GEMM ``quant_matmul`` without the fp weight ever
+existing.  Every dense projection in lm/attention/moe/ssm calls it, so a
+params pytree holding packed codes jits through prefill and decode
+unchanged.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.ops import is_packed, quant_matmul
+
+
+def linear(x: jax.Array, w) -> jax.Array:
+    """Dense projection dispatcher: ``x @ w`` for fp arrays, the packed
+    ``quant_matmul`` kernel for ``PackedWeight``.
+
+    Handles the model's activation ranks in one place: (B, T, D) streams
+    flatten to 2-D around the GEMM (the kernel wrapper itself pads
+    decode-time small-m shapes to the sublane tile), and expert-stacked
+    weights — leaves with a leading (E,) axis — contract batched, matching
+    ``einsum('ecd,edf->ecf')`` on the fp side."""
+    if not is_packed(w):
+        return x @ w
+    if w.w_packed.ndim == 3:  # expert stack: (E, C, d) x (E, ...) per-expert
+        return jax.vmap(quant_matmul)(x, w)
+    if x.ndim == 2:
+        return quant_matmul(x, w)
+    lead = x.shape[:-1]
+    y = quant_matmul(x.reshape(-1, x.shape[-1]), w)
+    return y.reshape(*lead, y.shape[-1])
 
 
 def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
@@ -53,14 +85,14 @@ def init_dense_ffn(key, d_model: int, d_ff: int, dtype):
 
 
 def apply_dense_ffn(p, x: jax.Array) -> jax.Array:
-    gate = jax.nn.silu(x @ p["wi"])
-    return (gate * (x @ p["wu"])) @ p["wd"]
+    gate = jax.nn.silu(linear(x, p["wi"]))
+    return linear(gate * linear(x, p["wu"]), p["wd"])
 
 
 def capture_dense_ffn(p, x: jax.Array):
     """Forward returning per-weight inputs for RSQ Hessian accumulation."""
-    h = jax.nn.silu(x @ p["wi"]) * (x @ p["wu"])
-    y = h @ p["wd"]
+    h = jax.nn.silu(linear(x, p["wi"])) * linear(x, p["wu"])
+    y = linear(h, p["wd"])
     return y, {"wi": x, "wu": x, "wd": h}
 
 

@@ -32,6 +32,7 @@ from repro.models.layers import (
     dense_init,
     init_dense_ffn,
     init_embedding,
+    linear,
     rms_norm,
 )
 from repro.runtime.sharding import LOCAL, ParallelCtx, param_specs
@@ -169,14 +170,14 @@ def apply_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None,
         q, k, v = att.gqa_qkv(p["mixer"], cfg, h, positions)
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
-        mix = out.reshape(b, t, -1) @ p["mixer"]["wo"]
+        mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
         cache = {"k": k, "v": v}
     elif meta.mixer == "mla":
         b, t, _ = h.shape
         q, k, v, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, positions)
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
-        mix = out.reshape(b, t, -1) @ p["mixer"]["wo"]
+        mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
         cache = {"c": c_kv, "r": k_rope}
     elif meta.mixer == "mamba":
         mix, (conv_s, ssm_s) = ssm_lib.apply_mamba(p["mixer"], cfg, h,
@@ -230,7 +231,7 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
             out = att.decode_attention(q, k_cache, v_cache, pos)
             new_cache.update(k=k_cache, v=v_cache)
-        mix = out.reshape(b, 1, -1) @ p["mixer"]["wo"]
+        mix = linear(out.reshape(b, 1, -1), p["mixer"]["wo"])
     elif meta.mixer == "mla":
         _, _, _, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, pos[None])
         c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv, pos, 1)
@@ -286,7 +287,7 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
         out, colsum = att.flash_attention(q, k, v, causal=meta.causal,
                                           kv_chunk=min(512, t), colsum=True)
         attn_out = out.reshape(b, t, -1)
-        mix = attn_out @ p["mixer"]["wo"]
+        mix = linear(attn_out, p["mixer"]["wo"])
         caps.update({"mixer/wq": h, "mixer/wk": h, "mixer/wv": h,
                      "mixer/wo": attn_out})
         dom.update({k_: "stream" for k_ in
@@ -296,22 +297,22 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
         dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
         kvr = cfg.kv_lora_rank
         if "wq_a" in pm:
-            ql = rms_norm(h @ pm["wq_a"], pm["q_norm"], cfg.norm_eps)
-            q = (ql @ pm["wq_b"]).reshape(b, t, cfg.n_heads, dn + dr)
+            ql = rms_norm(linear(h, pm["wq_a"]), pm["q_norm"], cfg.norm_eps)
+            q = linear(ql, pm["wq_b"]).reshape(b, t, cfg.n_heads, dn + dr)
             caps.update({"mixer/wq_a": h, "mixer/wq_b": ql})
             dom.update({"mixer/wq_a": "stream", "mixer/wq_b": "stream"})
         else:
-            q = (h @ pm["wq"]).reshape(b, t, cfg.n_heads, dn + dr)
+            q = linear(h, pm["wq"]).reshape(b, t, cfg.n_heads, dn + dr)
             caps["mixer/wq"] = h
             dom["mixer/wq"] = "stream"
         from repro.models.layers import apply_rope
         q_nope, q_rope = q[..., :dn], q[..., dn:]
         q = jnp.concatenate(
             [q_nope, apply_rope(q_rope, positions, cfg.rope_theta)], axis=-1)
-        kv = h @ pm["wkv_a"]
+        kv = linear(h, pm["wkv_a"])
         c_kv = rms_norm(kv[..., :kvr], pm["kv_norm"], cfg.norm_eps)
         k_rope = apply_rope(kv[..., None, kvr:], positions, cfg.rope_theta)
-        kvb = (c_kv @ pm["wkv_b"]).reshape(b, t, cfg.n_heads, dn + dv)
+        kvb = linear(c_kv, pm["wkv_b"]).reshape(b, t, cfg.n_heads, dn + dv)
         k = jnp.concatenate(
             [kvb[..., :dn],
              jnp.broadcast_to(k_rope, (b, t, cfg.n_heads, dr))], axis=-1)
@@ -319,7 +320,7 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
                                           causal=meta.causal,
                                           kv_chunk=min(512, t), colsum=True)
         ctx_out = out.reshape(b, t, -1)
-        mix = ctx_out @ pm["wo"]
+        mix = linear(ctx_out, pm["wo"])
         caps.update({"mixer/wkv_a": h, "mixer/wkv_b": c_kv,
                      "mixer/wo": ctx_out})
         dom.update({"mixer/wkv_a": "stream", "mixer/wkv_b": "stream",
@@ -330,12 +331,12 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
         dom.update({f"mixer/{k_}": "stream" for k_ in m_caps})
     elif meta.mixer == "cross":
         pm = p["mixer"]
-        q = (h @ pm["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = linear(h, pm["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
         kv = att.cross_kv(pm, cfg, media)
         out = att.flash_attention(q, *kv, causal=False,
                                   kv_chunk=min(512, kv[0].shape[1]))
         attn_out = out.reshape(b, t, -1)
-        mix = attn_out @ pm["wo"]
+        mix = linear(attn_out, pm["wo"])
         caps.update({"mixer/wq": h, "mixer/wk": media, "mixer/wv": media,
                      "mixer/wo": attn_out})
         dom.update({"mixer/wq": "stream", "mixer/wk": "media",
@@ -345,12 +346,12 @@ def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
     if meta.has_cross:
         h2 = rms_norm(x, p["cross_norm"], cfg.norm_eps)
         pc = p["cross"]
-        q = (h2 @ pc["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q = linear(h2, pc["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
         kv = att.cross_kv(pc, cfg, media)
         out = att.flash_attention(q, *kv, causal=False,
                                   kv_chunk=min(512, kv[0].shape[1]))
         attn_out = out.reshape(b, t, -1)
-        x = x + attn_out @ pc["wo"]
+        x = x + linear(attn_out, pc["wo"])
         caps.update({"cross/wq": h2, "cross/wk": media, "cross/wv": media,
                      "cross/wo": attn_out})
         dom.update({"cross/wq": "stream", "cross/wk": "media",
@@ -514,7 +515,7 @@ class Model:
 
     def logits(self, params, tokens, **kw) -> jax.Array:
         x, _ = self.hidden_states(params, tokens, **kw)
-        return (x @ self.head_weight(params)).astype(jnp.float32)
+        return linear(x, self.head_weight(params)).astype(jnp.float32)
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, media=None, frames=None,
@@ -558,7 +559,7 @@ class Model:
         x, group_caches = jax.lax.scan(body, x, params["groups"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         last = x[:, -1]
-        logits = (last @ self.head_weight(params)).astype(jnp.float32)
+        logits = linear(last, self.head_weight(params)).astype(jnp.float32)
         cache = {"groups": group_caches}
         if caches_prefix:
             cache["prefix"] = caches_prefix
@@ -641,7 +642,7 @@ class Model:
                                                cache["groups"]))
         new_cache["groups"] = new_groups
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        logits = linear(x[:, 0], self.head_weight(params)).astype(jnp.float32)
         return logits, new_cache
 
 

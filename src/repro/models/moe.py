@@ -20,7 +20,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, init_dense_ffn, apply_dense_ffn
+from repro.models.layers import (apply_dense_ffn, dense_init, init_dense_ffn,
+                                 linear)
 
 
 def init_moe(key, cfg, dtype):
@@ -101,9 +102,15 @@ def _expert_buffers(x2d, top_idx, top_w, e_start, e_local, capacity):
 
 
 def _expert_ffn(experts, buf):
-    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, experts["wi"]))
-    up = jnp.einsum("ecd,edf->ecf", buf, experts["wu"])
-    return jnp.einsum("ecf,efd->ecd", gate * up, experts["wd"])
+    """Batched per-expert SwiGLU over (E, C, d) capacity buffers.
+
+    ``linear`` keeps the leading expert axis batched for both weight
+    representations: fp (E, d, f) stacks contract as a batched matmul
+    (== einsum "ecd,edf->ecf"), packed stacks vmap the quant_matmul
+    kernel over E — the serving artifact's batched pack layout."""
+    gate = jax.nn.silu(linear(buf, experts["wi"]))
+    up = linear(buf, experts["wu"])
+    return linear(gate * up, experts["wd"])
 
 
 def moe_capacity(cfg, n_tokens: int) -> int:
@@ -156,10 +163,10 @@ def capture_moe(p, cfg, x):
     capacity = moe_capacity(cfg, b * t)
     buf, slot_token, slot_w = _expert_buffers(
         x2d, top_idx, top_w, 0, e, capacity)
-    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["experts"]["wi"]))
-    up = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["wu"])
+    gate = jax.nn.silu(linear(buf, p["experts"]["wi"]))
+    up = linear(buf, p["experts"]["wu"])
     hidden = gate * up
-    out = jnp.einsum("ecf,efd->ecd", hidden, p["experts"]["wd"])
+    out = linear(hidden, p["experts"]["wd"])
     h = out.reshape(e * capacity, d)
     y = jnp.zeros((b * t, d), x.dtype).at[slot_token].add(
         h * slot_w[:, None].astype(h.dtype), mode="drop")
@@ -178,5 +185,5 @@ def capture_moe(p, cfg, x):
 
 
 def _capture_shared(p, x2d):
-    h = jax.nn.silu(x2d @ p["wi"]) * (x2d @ p["wu"])
-    return h @ p["wd"], {"wi": x2d, "wu": x2d, "wd": h}
+    h = jax.nn.silu(linear(x2d, p["wi"])) * linear(x2d, p["wu"])
+    return linear(h, p["wd"]), {"wi": x2d, "wu": x2d, "wd": h}

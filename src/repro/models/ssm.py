@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import dense_init, linear, rms_norm
 
 
 def init_mamba(key, cfg, dtype):
@@ -96,10 +96,10 @@ def apply_mamba(p, cfg, x, *, return_state: bool = False):
     """x: (B, T, D) -> (B, T, D). Optionally returns (conv_state, ssm_state)."""
     b, t, _ = x.shape
     di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
-    zx = x @ p["wzx"]
+    zx = linear(x, p["wzx"])
     z, xin = zx[..., :di], zx[..., di:]
-    bc = x @ p["wbc"]
-    dt_raw = (x @ p["wdt"]).astype(jnp.float32)
+    bc = linear(x, p["wbc"])
+    dt_raw = linear(x, p["wdt"]).astype(jnp.float32)
 
     xbc = jnp.concatenate([xin, bc], axis=-1)
     conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
@@ -113,7 +113,7 @@ def apply_mamba(p, cfg, x, *, return_state: bool = False):
     y = y + p["D"][:, None] * xh.astype(jnp.float32)
     y = y.reshape(b, t, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = linear(y, p["out_proj"])
     if return_state:
         w = cfg.ssm_conv_width
         pre_act = jnp.concatenate([xin, bc], axis=-1)
@@ -128,10 +128,10 @@ def capture_mamba(p, cfg, x):
     wzx/wbc/wdt see the (normed) stream; out_proj sees the gated output."""
     b, t, _ = x.shape
     di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
-    zx = x @ p["wzx"]
+    zx = linear(x, p["wzx"])
     z, xin = zx[..., :di], zx[..., di:]
-    bc = x @ p["wbc"]
-    dt_raw = (x @ p["wdt"]).astype(jnp.float32)
+    bc = linear(x, p["wbc"])
+    dt_raw = linear(x, p["wdt"]).astype(jnp.float32)
     xbc = jnp.concatenate([xin, bc], axis=-1)
     conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
     xbc = jax.nn.silu(_causal_conv(xbc, conv_w, p["conv_b"]))
@@ -143,7 +143,7 @@ def capture_mamba(p, cfg, x):
     y = y + p["D"][:, None] * xh.astype(jnp.float32)
     y = y.reshape(b, t, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = linear(y, p["out_proj"])
     caps = {"wzx": x, "wbc": x, "wdt": x, "out_proj": y}
     return out, caps
 
@@ -154,10 +154,10 @@ def mamba_decode(p, cfg, x, conv_state, ssm_state):
     b = x.shape[0]
     di, st, nh, hd = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_n_heads, cfg.ssm_head_dim
     w = cfg.ssm_conv_width
-    zx = x @ p["wzx"]
+    zx = linear(x, p["wzx"])
     z, xin = zx[..., :di], zx[..., di:]
-    bc = x @ p["wbc"]
-    dt_raw = (x @ p["wdt"]).astype(jnp.float32)[:, 0]  # (B, nh)
+    bc = linear(x, p["wbc"])
+    dt_raw = linear(x, p["wdt"]).astype(jnp.float32)[:, 0]  # (B, nh)
 
     xbc_t = jnp.concatenate([xin, bc], axis=-1)[:, 0]  # (B, di+2st)
     conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)  # (W, C)
@@ -177,6 +177,6 @@ def mamba_decode(p, cfg, x, conv_state, ssm_state):
     y = y + p["D"][:, None] * xh
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = linear(y, p["out_proj"])
     new_conv_state = window[:, 1:]
     return out, (new_conv_state, h_new)

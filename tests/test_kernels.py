@@ -61,12 +61,52 @@ def test_quant_matmul_vs_ref(bits, k, n, m, gs):
     deq, q, s, z = quantize_weight_rtn(w, spec)
     pw = pack_weight(q, s, z, spec)
     x = jax.random.normal(jax.random.key(m), (m, k))
-    a = quant_matmul(x, pw)
+    a = quant_matmul(x, pw, use_kernel=True)  # interpret-mode Pallas off-TPU
     b = quant_matmul_ref(x, pw.w_packed, s, z, bits=bits, group_size=gs)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3,
                                rtol=1e-3)
     np.testing.assert_allclose(np.asarray(a), np.asarray(x @ deq), atol=1e-2,
                                rtol=1e-2)
+
+
+@pytest.mark.parametrize("m", [1, 2, 5, 7])
+def test_quant_matmul_decode_shapes_stay_on_kernel(m, monkeypatch):
+    """Decode-time m (batch of generating sequences, not a sublane
+    multiple of 8) must pad up inside the wrapper and stay on the Pallas
+    kernel — never bounce to the unfused ref path."""
+    import repro.kernels.quant_matmul.ops as ops
+
+    k, n = 256, 128
+    spec = QuantSpec(bits=4, group_size=64, sym=False)
+    w = jax.random.normal(jax.random.key(m), (k, n)) * 0.4
+    deq, q, s, z = quantize_weight_rtn(w, spec)
+    pw = pack_weight(q, s, z, spec)
+
+    def boom(*a, **kw):
+        raise AssertionError("decode shape fell back to quant_matmul_ref")
+
+    monkeypatch.setattr(ops, "quant_matmul_ref", boom)
+    x = jax.random.normal(jax.random.key(m + 100), (m, k))
+    y = quant_matmul(x, pw, use_kernel=True)
+    assert y.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ deq),
+                               atol=1e-2, rtol=1e-2)
+
+
+def test_quant_matmul_per_tensor_groups_fall_back():
+    """group_size=-1 (one group spanning d_in) with d_in > 512: no k tile
+    can hold a whole group, so the wrapper must serve via ref instead of
+    looping its block size down to zero."""
+    k, n = 1024, 128
+    spec = QuantSpec(bits=4, group_size=-1, sym=True)
+    w = jax.random.normal(jax.random.key(5), (k, n)) * 0.4
+    deq, q, s, z = quantize_weight_rtn(w, spec)
+    pw = pack_weight(q, s, z, spec)
+    assert pw.group_size == k
+    x = jax.random.normal(jax.random.key(6), (8, k))
+    np.testing.assert_allclose(
+        np.asarray(quant_matmul(x, pw, use_kernel=True)),
+        np.asarray(x @ deq), atol=1e-2, rtol=1e-2)
 
 
 def test_quant_matmul_3bit_falls_back():
@@ -76,7 +116,7 @@ def test_quant_matmul_3bit_falls_back():
     deq, q, s, z = quantize_weight_rtn(w, spec)
     pw = pack_weight(q, s, z, spec)
     x = jax.random.normal(jax.random.key(4), (8, k))
-    np.testing.assert_allclose(np.asarray(quant_matmul(x, pw)),
+    np.testing.assert_allclose(np.asarray(quant_matmul(x, pw, use_kernel=True)),
                                np.asarray(x @ deq), atol=1e-2, rtol=1e-2)
 
 
