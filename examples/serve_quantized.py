@@ -7,8 +7,15 @@ decode with the KV cache.  The packed parameter tree drops into the exact
 same serving path as the fp one: every dense projection dispatches
 through ``models.layers.linear``, which feeds ``PackedWeight`` nodes to
 the fused dequant-GEMM ``quant_matmul`` — no fp copy of any quantized
-weight is ever created, so resident weight memory is ~bits/32 of the
-fp32 model.
+weight is ever created (MLA's absorbed decode included), so resident
+weight memory is ~bits/32 of the fp32 model.
+
+Generation runs the fused **scan loop** (``generate(..., loop="scan")``,
+the default): prefill plus one jitted ``lax.scan`` device program for the
+whole decode — on-device sampling, donated KV cache, no per-token host
+round-trip.  The example times the legacy ``loop="python"`` dispatch
+loop alongside so the fusion win is visible next to the quantization
+win.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -58,11 +65,15 @@ def main():
 
     prompts = corpus.sample(jax.random.key(2), 4, 32)
     for tag, p in (("fp32", params), ("rsq-4bit-keep-packed", packed_params)):
-        t0 = time.time()
-        out = generate(model, p, prompts, 16)
-        jax.block_until_ready(out)
-        print(f"{tag}: {out.shape[0] * out.shape[1]} tokens in "
-              f"{time.time() - t0:.2f}s; sample {out[0][:8].tolist()}")
+        for loop in ("scan", "python"):
+            out = generate(model, p, prompts, 16, loop=loop)  # compile
+            jax.block_until_ready(out)
+            t0 = time.time()
+            out = generate(model, p, prompts, 16, loop=loop)
+            jax.block_until_ready(out)
+            print(f"{tag} [loop={loop}]: {out.shape[0] * out.shape[1]} "
+                  f"tokens in {time.time() - t0:.2f}s; "
+                  f"sample {out[0][:8].tolist()}")
 
 
 if __name__ == "__main__":

@@ -298,18 +298,21 @@ def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL,
     fused dequant-GEMM ``quant_matmul``.  No fp array of any quantized
     weight's full shape is ever created — not on host (shards reassemble
     in packed form) and not on device (the kernel dequantizes tile-wise
-    in VMEM), with one exception: MLA's absorbed decode contracts
-    ``wkv_b`` per-head and dequantizes it transiently inside the step
-    trace (``models.attention._materialize``).  Resident weight HBM is
-    therefore ~bits/16 of the bf16 model (bits/32 of fp32) plus the
-    small group params.
+    in VMEM), with no exceptions: even MLA's absorbed decode contracts
+    the per-head ``wkv_b`` views on packed codes (``mla_latent_weights``
+    + the latent-layout ``quant_matmul_t`` — ``attention.mla_decode``).
+    Resident weight HBM is therefore ~bits/16 of the bf16 model (bits/32
+    of fp32) plus the small group params.
 
     Stacked layer groups re-stack per-layer *codes* along the leading
     axis, so the stacked ``PackedWeight`` rides the model's ``lax.scan``
     unchanged; expert entries keep their leading (E,) axis and dispatch
     through the vmapped kernel.  With a live mesh ``ctx``, codes / scale /
     zero are placed d_out-sharded on the model axis (the decode-serving
-    layout: output-dim sharded weights, no per-token weight gathers)."""
+    layout: output-dim sharded weights, no per-token weight gathers) and
+    the ``PackedWeight`` carries the (mesh, axis) placement in its aux, so
+    ``quant_matmul`` can run the fused Pallas kernel per shard under
+    ``shard_map`` instead of demoting sharded codes to the ref GEMM."""
     d = Path(directory)
     entries, meta = load_packed_artifact(d)
     params = _load_residual(d, meta)
@@ -335,8 +338,12 @@ def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL,
             w_packed=codes, scale=put(fields["scale"])[0],
             zero=put(fields["zero"])[0], bits=int(spec["bits"]),
             group_size=int(em["group_size"]), d_in=int(em["d_in"]),
-            # partitioned codes must take the GSPMD-partitionable ref GEMM,
-            # not the opaque Pallas call (see PackedWeight.mesh_sharded)
-            mesh_sharded=sharded)
+            # partitioned codes must never reach GSPMD as an opaque Pallas
+            # call (it would all-gather them); the (mesh, axis) aux lets
+            # quant_matmul shard_map the kernel over the model axis, with
+            # the partitionable ref GEMM as its fallback
+            mesh_sharded=sharded,
+            mesh=ctx.mesh if sharded else None,
+            mesh_axis=ctx.tp if sharded else None)
     params = jax.tree.map(jnp.asarray, params)
     return params, meta

@@ -21,21 +21,68 @@ deployments dequantize via ref — documented in DESIGN.md).  Decode-shape
 inputs (m = batch, not a sublane multiple of 8) are padded up to 8 inside
 the wrapper and the output sliced back, so single-token decode stays on
 the Pallas kernel instead of bouncing to the slow ref path.
+
+Kernel policy (shared by every entry point here): the Pallas kernel on
+TPU, the fused-XLA ref elsewhere — same as the gram kernel.  The
+``REPRO_QMM_KERNEL`` env var overrides the default (``1`` forces the
+kernel — interpret-mode off-TPU, a correctness/CI tool; ``0`` forces the
+ref); an explicit ``use_kernel=`` argument beats both.
+
+Mesh-sharded weights (``PackedWeight.mesh_sharded``, set by
+``checkpoint.packed.load_packed_forward_params``) used to be ref-only:
+the Pallas kernel is an opaque custom call GSPMD would service by
+all-gathering the full codes per device.  They now run the fused kernel
+through ``shard_map`` over the model axis instead (:func:`quant_matmul`
+routes there automatically): the codes are d_out-sharded, so each shard
+runs the kernel on its local (k, n/axis) tile with *zero* weight
+collectives — no weight ever moves, which is the decode-serving
+layout's whole point.  The GSPMD-partitionable ref remains
+the fallback for meshless callers, non-TPU backends (unless the kernel is
+forced), misaligned local tiles, 3-bit, and expert stacks under ``vmap``.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.quantizer import QuantSpec, pack_codes
-from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
-from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.kernels.quant_matmul.kernel import (quant_matmul_pallas,
+                                               quant_matmul_t_pallas)
+from repro.kernels.quant_matmul.ref import (quant_matmul_ref,
+                                            quant_matmul_t_ref)
+
+try:  # jax >= 0.4.35
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _kernel_default() -> bool:
+    """Backend kernel policy with the ``REPRO_QMM_KERNEL`` env override."""
+    env = os.environ.get("REPRO_QMM_KERNEL")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "off")
+    return jax.default_backend() == "tpu"
+
+
+def _smap(fn, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across the jax rename
+    (``check_rep`` -> ``check_vma``): the Pallas custom call has no
+    replication rule for the checker to consult."""
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:  # pragma: no cover - depends on jax version
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -56,20 +103,23 @@ class PackedWeight:
     bits: int
     group_size: int
     d_in: int
-    # codes are partitioned across a live mesh (set by
-    # checkpoint.packed.load_packed_forward_params): the Pallas kernel is
-    # an opaque custom call GSPMD would service by all-gathering the full
-    # codes per device, so mesh-sharded weights stay on the jnp ref,
-    # which partitions like any GEMM.  A shard_map-wrapped kernel (the
-    # gram-kernel precedent) is the recorded ROADMAP follow-up.
+    # codes partitioned across a live mesh (set by
+    # checkpoint.packed.load_packed_forward_params): ``mesh``/``mesh_axis``
+    # name the d_out shard placement so quant_matmul can wrap the Pallas
+    # kernel in shard_map over that axis (per-shard fused GEMMs, no code
+    # all-gather); when the shard_map route can't run (no kernel, ragged
+    # local tile, expert stacks under vmap) the flag keeps the codes on
+    # the GSPMD-partitionable ref GEMM instead of the opaque custom call.
     mesh_sharded: bool = False
+    mesh: Mesh | None = None
+    mesh_axis: str | None = None
 
     def tree_flatten_with_keys(self):
         children = tuple(
             (jax.tree_util.GetAttrKey(f), getattr(self, f))
             for f in ("w_packed", "scale", "zero"))
         return children, (self.bits, self.group_size, self.d_in,
-                          self.mesh_sharded)
+                          self.mesh_sharded, self.mesh, self.mesh_axis)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -114,8 +164,73 @@ def packed_weight_from_artifact(entry: dict, em: dict,
         group_size=int(em["group_size"]), d_in=int(em["d_in"]))
 
 
+def _k_tile(k: int, group_size: int) -> int:
+    """Largest power-of-two reduction tile <= 512 that divides k and holds
+    whole quant groups (0 when none exists — kernel can't tile)."""
+    k_blk = 512
+    while k_blk and (k % k_blk or k_blk % group_size):
+        k_blk //= 2
+    return k_blk
+
+
+def _shard_map_matmul(x: jax.Array, pw: PackedWeight) -> jax.Array | None:
+    """Mesh-sharded fused route: the Pallas kernel per d_out shard.
+
+    The codes (and the per-group scale/zero) are partitioned on their last
+    axis over ``pw.mesh_axis``; ``shard_map`` hands each device its local
+    (k/vpw, n_local) tile and the kernel runs on it exactly as in the
+    unsharded case — no code all-gather (the very collective GSPMD would
+    insert around the opaque custom call), no output collective (the
+    result stays d_out-sharded, the decode activation layout).  The
+    activation is the only replicated operand — a deliberate trade: row-
+    sharding m over the data axes would save the dp-fold duplicate GEMM
+    work at prefill, but XLA's GEMM accumulation order depends on m, so
+    the per-row results stop being bit-identical to the GSPMD ref and
+    greedy tokens drift off the dequantized reference (measured:
+    ~4e-5 logit deltas, token flips within 8 steps).  Decode — the shape
+    this kernel exists for — has a tiny m where replication is the right
+    layout anyway; revisiting prefill row-sharding under a tolerance-
+    based parity contract is a recorded ROADMAP item.  Returns None when
+    the local tile can't align to the kernel (caller falls back to the
+    ref GEMM, which partitions under GSPMD like any GEMM)."""
+    mesh, axis = pw.mesh, pw.mesh_axis
+    n = pw.w_packed.shape[1]
+    axis_size = mesh.shape[axis]
+    if n % axis_size:
+        return None
+    n_loc = n // axis_size
+    m, k = x.shape
+    vpw = 32 // pw.bits
+    k_blk = _k_tile(k, pw.group_size)
+    aligned = (pw.d_in % vpw == 0 and k % 128 == 0 and n_loc % 128 == 0
+               and k_blk)
+    if not aligned:
+        return None
+    m_pad = (-m) % 8
+    if m_pad:
+        x = jnp.concatenate([x, jnp.zeros((m_pad, k), x.dtype)], axis=0)
+    m_blk = 128
+    while x.shape[0] % m_blk:
+        m_blk //= 2
+    n_blk = 256
+    while n_loc % n_blk:
+        n_blk //= 2
+
+    def local(xs, wq, sc, zr):
+        return quant_matmul_pallas(
+            xs, wq, sc, zr, bits=pw.bits, group_size=pw.group_size,
+            m_blk=m_blk, n_blk=n_blk, k_blk=k_blk, interpret=_interpret())
+
+    out = _smap(local, mesh,
+                in_specs=(P(None, None), P(None, axis), P(None, axis),
+                          P(None, axis)),
+                out_specs=P(None, axis))(x, pw.w_packed, pw.scale, pw.zero)
+    return out[:m] if m_pad else out
+
+
 def quant_matmul(x: jax.Array, pw: PackedWeight, *,
-                 use_kernel: bool | None = None) -> jax.Array:
+                 use_kernel: bool | None = None,
+                 shard: bool = True) -> jax.Array:
     """y = x @ dequant(pw).  x: (m, k) -> (m, n), fp32 accumulation.
 
     Decode shapes (m not a multiple of the 8-row sublane tile) are padded
@@ -125,27 +240,39 @@ def quant_matmul(x: jax.Array, pw: PackedWeight, *,
     memory-bound shape) is serving for.
 
     ``use_kernel``: None (default) auto-selects the Pallas kernel on TPU
-    for unsharded weights and the jnp ref elsewhere — the same policy as
-    the gram kernel (``RSQConfig.use_gram_kernel``): off-TPU the kernel
-    only runs in interpret mode, a correctness tool that would serialize
-    the serving hot loop, and mesh-sharded codes (``pw.mesh_sharded``)
-    must not hit an opaque custom call GSPMD would all-gather.  The ref
-    is a fused XLA unpack+dequant+matmul on the same packed codes —
-    resident HBM stays packed either way."""
+    and the jnp ref elsewhere — the same policy as the gram kernel
+    (``RSQConfig.use_gram_kernel``); the ``REPRO_QMM_KERNEL`` env var
+    overrides the default (interpret mode off-TPU is a correctness tool
+    that would serialize the serving hot loop).  Mesh-sharded codes
+    (``pw.mesh_sharded``) run the kernel *per shard* under shard_map over
+    the model axis (see :func:`_shard_map_matmul`) — an opaque custom
+    call must never reach GSPMD, which would all-gather the codes —
+    falling back to the ref when the local tile is ragged.  ``shard=False``
+    disables the shard_map route (the vmapped expert-stack dispatch sets
+    it: shard_map can't nest under vmap).  The ref is a fused XLA
+    unpack+dequant+matmul on the same packed codes — resident HBM stays
+    packed either way."""
     m, k = x.shape
     vpw = 32 // pw.bits
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    if pw.mesh_sharded:
+        if (shard and use_kernel and pw.mesh is not None and pw.mesh_axis
+                and pw.bits != 3 and 32 % pw.bits == 0
+                and pw.w_packed.ndim == 2):
+            out = _shard_map_matmul(x, pw)
+            if out is not None:
+                return out
+        return quant_matmul_ref(x, pw.w_packed, pw.scale, pw.zero,
+                                bits=pw.bits, group_size=pw.group_size,
+                                d_in=pw.d_in)
     aligned = (32 % pw.bits == 0 and pw.d_in % vpw == 0
                and k % 128 == 0 and pw.w_packed.shape[1] % 128 == 0)
-    if use_kernel is None:
-        use_kernel = (jax.default_backend() == "tpu"
-                      and not pw.mesh_sharded)
     # the k tile must divide k and contain whole quant groups; when no
     # power-of-two tile <= 512 does both (per-tensor groups with a large
     # d_in, group_size > 512, non-power-of-two groups) the kernel can't
     # tile the reduction — serve via ref like the 3-bit case
-    k_blk = 512
-    while k_blk and (k % k_blk or k_blk % pw.group_size):
-        k_blk //= 2
+    k_blk = _k_tile(k, pw.group_size)
     if not (aligned and use_kernel and k_blk) or pw.bits == 3:
         return quant_matmul_ref(x, pw.w_packed, pw.scale, pw.zero,
                                 bits=pw.bits, group_size=pw.group_size,
@@ -165,3 +292,82 @@ def quant_matmul(x: jax.Array, pw: PackedWeight, *,
         group_size=pw.group_size, m_blk=m_blk, n_blk=n_blk, k_blk=k_blk,
         interpret=_interpret())
     return out[:m] if m_pad else out
+
+
+def quant_matmul_t(x: jax.Array, pw: PackedWeight, *,
+                   use_kernel: bool | None = None) -> jax.Array:
+    """Latent-layout GEMM: y = x @ dequant(pw)ᵀ.  x: (m, d) -> (m, d_in).
+
+    The contraction runs over the weight's *columns* while the codes stay
+    packed along d_in (which becomes the output axis) — the layout MLA's
+    absorbed decode needs to contract the per-head-reshaped ``wkv_b``
+    against queries/attention outputs without ever materializing the fp
+    weight (``models.attention.mla_decode``).  Kernel policy matches
+    :func:`quant_matmul`; mesh-sharded codes take the GSPMD ref (the
+    per-head latent contractions are tiny and column-sharded)."""
+    m, d = x.shape
+    vpw = 32 // pw.bits
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    k_blk = _k_tile(pw.d_in, pw.group_size)
+    aligned = (32 % pw.bits == 0 and pw.d_in % vpw == 0
+               and pw.d_in % 128 == 0 and d % 128 == 0
+               and pw.w_packed.shape[0] * vpw == pw.d_in
+               and k_blk and k_blk % vpw == 0)
+    if (not (aligned and use_kernel) or pw.bits == 3 or pw.mesh_sharded):
+        return quant_matmul_t_ref(x, pw.w_packed, pw.scale, pw.zero,
+                                  bits=pw.bits, group_size=pw.group_size,
+                                  d_in=pw.d_in)
+    m_pad = (-m) % 8
+    if m_pad:
+        x = jnp.concatenate([x, jnp.zeros((m_pad, d), x.dtype)], axis=0)
+    m_blk = 128
+    while x.shape[0] % m_blk:
+        m_blk //= 2
+    d_blk = 512
+    while d % d_blk:
+        d_blk //= 2
+    out = quant_matmul_t_pallas(
+        x, pw.w_packed, pw.scale, pw.zero, bits=pw.bits,
+        group_size=pw.group_size, m_blk=m_blk, k_blk=k_blk,
+        d_blk=d_blk, interpret=_interpret())
+    return out[:m] if m_pad else out
+
+
+def mla_latent_weights(pw: PackedWeight, n_heads: int, dn: int, dv: int,
+                       ) -> tuple[PackedWeight, PackedWeight]:
+    """Per-head latent views of a packed MLA ``wkv_b``: (pw_k, pw_v).
+
+    ``wkv_b`` is quantized as one (kvr, H*(dn+dv)) matrix; absorbed decode
+    contracts its two halves per head.  Packing runs along d_in (=kvr), so
+    slicing/reshaping the *column* axis is exact on the packed codes — no
+    unpack, no dequant: both views share the original leaves' memory
+    modulo the transpose.  Returns
+
+      * ``pw_k`` — (H, kvr//vpw, dn) codes (+ per-head group params), fed
+        to ``vmap(quant_matmul_t)``: absorb W_k into the per-head query,
+        q_lat = q_nope @ W_kᵀ, output in latent space (kvr).
+      * ``pw_v`` — (H, kvr//vpw, dv) codes, fed to ``vmap(quant_matmul)``:
+        expand the per-head latent attention output, ctx = ctx_lat @ W_v.
+
+    Mesh placement: the parent's last axis (H*(dn+dv)) shards over the
+    model axis, so the per-head views inherit head-sharded leaves; they
+    keep ``mesh_sharded`` (the vmapped ops stay on the GSPMD ref — the
+    shard_map route doesn't nest under vmap)."""
+    codes = pw.w_packed.reshape(pw.w_packed.shape[0], n_heads, dn + dv)
+    scale = pw.scale.reshape(pw.scale.shape[0], n_heads, dn + dv)
+    zero = pw.zero.reshape(pw.zero.shape[0], n_heads, dn + dv)
+
+    def head_view(lo, hi):
+        return (codes[:, :, lo:hi].transpose(1, 0, 2),
+                scale[:, :, lo:hi].transpose(1, 0, 2),
+                zero[:, :, lo:hi].transpose(1, 0, 2))
+
+    def mk(leaves):
+        return PackedWeight(
+            w_packed=leaves[0], scale=leaves[1], zero=leaves[2],
+            bits=pw.bits, group_size=pw.group_size, d_in=pw.d_in,
+            mesh_sharded=pw.mesh_sharded, mesh=pw.mesh,
+            mesh_axis=pw.mesh_axis)
+
+    return mk(head_view(0, dn)), mk(head_view(dn, dn + dv))

@@ -29,3 +29,27 @@ def quant_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
     wg = (codes.reshape(g, group_size, n) - zero.astype(jnp.float32)[:, None])
     w = (wg * scale.astype(jnp.float32)[:, None]).reshape(k, n)
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quant_matmul_t_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                       zero: jax.Array, *, bits: int, group_size: int,
+                       d_in: int) -> jax.Array:
+    """Transposed (latent-layout) oracle: y = x @ dequant(W)ᵀ.
+
+    x: (m, d); w_packed: (d_in // vpw, d) packed along its first axis;
+    scale/zero: (d_in // gs, d).  Returns (m, d_in).  Mirrors
+    :func:`quant_matmul_ref`'s footprint discipline: the peak intermediate
+    is the (d_in, d) fp32 dequantized weight formed through the grouped
+    (g, gs, d) view — never an (m, g, d) partial-product blowup — followed
+    by one transposed contraction XLA partitions like any GEMM (this *is*
+    the MLA absorbed-decode path off-TPU and under GSPMD-sharded codes)."""
+    k = d_in
+    d = w_packed.shape[-1]
+    g = scale.shape[-2]
+    assert g * group_size == k, (g, group_size, k)
+    codes = unpack_codes(w_packed, bits, k).astype(jnp.float32)  # (k, d)
+    wg = (codes.reshape(g, group_size, d) - zero.astype(jnp.float32)[:, None])
+    w = (wg * scale.astype(jnp.float32)[:, None]).reshape(k, d)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,5 +1,5 @@
-"""Batched serving driver: prefill + decode loop with a KV cache, optional
-weight-only quantized execution (RSQ output + quant_matmul kernel).
+"""Batched serving driver: prefill + fused decode loop with a KV cache,
+optional weight-only quantized execution (RSQ output + quant_matmul kernel).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b-smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -9,14 +9,36 @@ launch.quantize --pack-out).  The default is **keep-packed** serving
 (``--keep-packed``): the param tree holds the uint32 codes as
 ``PackedWeight`` pytree nodes and every dense projection runs through the
 fused dequant-GEMM ``quant_matmul`` — no fp array of any quantized
-weight's full shape is ever created, on host or in HBM (one exception:
-MLA's absorbed decode dequantizes ``wkv_b`` transiently per step inside
-the trace — ``models.attention._materialize``), so resident weight
-memory is ~bits/16 of the bf16 model.  ``--no-keep-packed``
-restores the legacy load-time device-side dequantization
+weight's full shape is ever created, on host or in HBM (MLA's absorbed
+decode included: its per-head ``wkv_b`` contractions run on the packed
+codes through the latent-layout ``quant_matmul_t``), so resident weight
+memory is ~bits/16 of the bf16 model.  ``--no-keep-packed`` restores the
+legacy load-time device-side dequantization
 (``checkpoint.packed.load_packed_params``) for A/B comparisons; both
 paths jit prefill and decode through the same model code
 (``models.layers.linear`` dispatches per weight type).
+
+Serving performance
+-------------------
+
+* ``--loop scan`` (default): the whole generation is ONE device program —
+  a jitted ``lax.scan`` over decode steps with the KV cache donated into
+  it and sampling (greedy argmax or ``--temperature`` categorical, keys
+  derived per step via ``jax.random.fold_in``) on device.  The per-token
+  host round-trip + dispatch of the old loop is gone, which is what let
+  packed decode overtake fp (decode is memory-bound; the packed kernel's
+  16/bits weight-traffic win only shows once dispatch stops dominating).
+  ``--loop python`` keeps the legacy one-jitted-dispatch-per-token loop
+  as a debug mode; greedy tokens are bit-identical between the two
+  (pinned by tests/test_serve_scan.py).
+* Kernel policy: ``quant_matmul`` auto-selects the fused Pallas kernel on
+  TPU and the fused-XLA ref elsewhere; ``REPRO_QMM_KERNEL=1`` forces the
+  kernel (interpret mode off-TPU — a correctness/CI tool, not a fast
+  path), ``=0`` forces the ref.
+* Mesh behaviour: with a live mesh the artifact's codes load d_out-sharded
+  on the model axis and ``quant_matmul`` runs the kernel per shard under
+  ``shard_map`` — no code all-gather, no ref-GEMM fallback; ragged local
+  tiles and expert stacks under vmap fall back to the GSPMD ref.
 
 ``--kernel-check`` is deprecated: the keep-packed forward now routes
 *every* projection through ``quant_matmul`` and the full-forward parity
@@ -30,6 +52,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
@@ -40,26 +63,94 @@ from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
 
 
+def _sample_token(logits, temperature: float, key, step) -> jax.Array:
+    """(B, V) logits -> (B, 1) int32 token; greedy at temperature 0,
+    categorical at ``logits / temperature`` otherwise with the step's key
+    derived by ``fold_in`` (deterministic in (key, step) — the python and
+    scan loops draw identical streams)."""
+    if temperature > 0.0:
+        sub = jax.random.fold_in(key, step)
+        tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        return tok.astype(jnp.int32)[:, None]
+    return jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+
+@functools.lru_cache(maxsize=64)
+def _prefill_fn(model, cache_len: int):
+    return jax.jit(lambda p, x, media, frames: model.prefill(
+        p, x, media=media, frames=frames, cache_len=cache_len))
+
+
+@functools.lru_cache(maxsize=64)
+def _scan_decode_fn(model, n_gen: int, sampled: bool):
+    """One jitted program for the whole generation: ``lax.scan`` over the
+    decode steps, KV cache donated in (the scan's double-buffered carry is
+    the only cache storage), sampling on device — a single dispatch and a
+    single host sync for ``n_gen`` tokens.
+
+    Only the *mode* (greedy vs sampled) is static; the temperature rides
+    in as a traced scalar so sweeping it costs zero recompiles — at most
+    two programs exist per (model, n_gen).
+
+    Token 0 comes from the prefill logits, so only n_gen - 1 decode
+    steps run: each scan iteration emits the token it just *produced*
+    and the prefill token is prepended — no trailing decode_step whose
+    outputs nothing consumes."""
+
+    def run(params, cache, tok0, pos0, key, temperature):
+        def body(carry, step):
+            cache, tok, pos = carry
+            logits, cache = model.decode_step(params, cache, tok, pos)
+            if sampled:
+                sub = jax.random.fold_in(key, step + 1)
+                nxt = jax.random.categorical(
+                    sub, logits / temperature, axis=-1
+                ).astype(jnp.int32)[:, None]
+            else:
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            return (cache, nxt, pos + jnp.int32(1)), nxt[:, 0]
+
+        (_, _, _), toks = jax.lax.scan(
+            body, (cache, tok0, pos0), jnp.arange(n_gen - 1))
+        return jnp.concatenate([tok0, toks.T], axis=1)  # (B, n_gen)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
 def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
-             temperature: float = 0.0, key=None):
-    """prompts: (B, T). Greedy (or sampled) generation of n_gen tokens."""
+             temperature: float = 0.0, key=None, loop: str = "scan"):
+    """prompts: (B, T) -> (B, n_gen) generated tokens.
+
+    Greedy when ``temperature == 0``; otherwise categorical sampling of
+    *every* token — including the first one, drawn from the prefill
+    logits — with per-step keys ``fold_in(key, step)`` (``key`` is then
+    required).  ``loop="scan"`` (default) runs the fused on-device
+    generation loop; ``loop="python"`` is the legacy per-token dispatch
+    loop, kept as a debug mode — greedy tokens are bit-identical between
+    the two."""
+    if loop not in ("scan", "python"):
+        raise ValueError(f"loop must be 'scan' or 'python', got {loop!r}")
+    if temperature > 0.0 and key is None:
+        raise ValueError("temperature > 0 requires a PRNG `key`; pass "
+                         "key=jax.random.key(seed) (silently degrading to "
+                         "greedy was a bug)")
     b, t = prompts.shape
-    logits, cache = jax.jit(
-        lambda p, x: model.prefill(p, x, media=media, frames=frames,
-                                   cache_len=t + n_gen))(params, prompts)
+    logits, cache = _prefill_fn(model, t + n_gen)(params, prompts,
+                                                  media, frames)
+    if key is None:
+        key = jax.random.key(0)  # unused at temperature 0 (DCE'd)
+    tok = _sample_token(logits, temperature, key, 0)
+    if loop == "scan":
+        return _scan_decode_fn(model, n_gen, temperature > 0.0)(
+            params, cache, tok, jnp.int32(t), key,
+            jnp.float32(temperature))
     step = jax.jit(model.decode_step, donate_argnums=(1,))
-    toks = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    toks = [tok]
     pos = t
-    for i in range(n_gen):
-        toks.append(tok)
+    for i in range(n_gen - 1):  # token 0 is the prefill sample
         logits, cache = step(params, cache, tok, jnp.int32(pos))
-        if temperature > 0.0 and key is not None:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        tok = _sample_token(logits, temperature, key, i + 1)
+        toks.append(tok)
         pos += 1
     return jnp.concatenate(toks, axis=1)
 
@@ -112,6 +203,15 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loop", choices=("scan", "python"), default="scan",
+                    help="generation loop: 'scan' (default) fuses all "
+                    "decode steps into one jitted lax.scan device program "
+                    "with on-device sampling and a donated KV cache; "
+                    "'python' is the legacy per-token dispatch loop "
+                    "(debug; greedy tokens are bit-identical)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy); every token "
+                    "including the first is sampled, keyed by --seed")
     ap.add_argument("--packed", default=None, metavar="DIR",
                     help="serve from a packed RSQ artifact (written by "
                     "launch.quantize --pack-out): weights travel host->"
@@ -163,12 +263,14 @@ def main(argv=None):
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
     prompts = corpus.sample(jax.random.key(1), args.batch, args.prompt_len)
 
+    key = (jax.random.key(args.seed) if args.temperature > 0.0 else None)
     t0 = time.time()
-    out = generate(model, params, prompts, args.gen)
+    out = generate(model, params, prompts, args.gen, loop=args.loop,
+                   temperature=args.temperature, key=key)
     jax.block_until_ready(out)
     dt = time.time() - t0
     print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, loop={args.loop})")
     print("sample:", out[0][:16].tolist())
     return out
 

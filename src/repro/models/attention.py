@@ -9,13 +9,15 @@ backward pass recomputes per-chunk scores instead of storing them.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantizer import dequantize_packed
-from repro.kernels.quant_matmul.ops import is_packed
+from repro.kernels.quant_matmul.ops import (is_packed, mla_latent_weights,
+                                            quant_matmul, quant_matmul_t)
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
 
 NEG_INF = -1e30
@@ -25,11 +27,15 @@ def _materialize(w):
     """fp view of a projection weight, for math that contracts the weight
     per-head instead of as a plain GEMM (MLA's absorbed decode).
 
-    For a ``PackedWeight`` this dequantizes *inside the jitted step* — a
-    transient VMEM/HBM tile of the decode trace, not a resident fp copy in
-    the params pytree; every other projection in the module stays on the
-    packed ``quant_matmul`` path via ``linear``."""
-    if is_packed(w):
+    Historical note: this used to dequantize a packed ``wkv_b`` inside the
+    jitted decode step — the one transient fp materialization left in the
+    packed decode path.  Absorbed decode now contracts packed codes
+    directly through the latent-layout kernels
+    (``quant_matmul_t``/``quant_matmul`` over ``mla_latent_weights``
+    views), so a ``PackedWeight`` reaching here means a dispatch bug: the
+    zero-dequant serving contract (tests/test_serve_packed.py) counts any
+    ``dequantize_packed`` call during generate as a failure."""
+    if is_packed(w):  # pragma: no cover - guarded against by mla_decode
         assert w.w_packed.ndim == 2, w.w_packed.shape
         return dequantize_packed(w.w_packed, w.scale, w.zero,
                                  bits=w.bits, d_in=w.d_in)
@@ -307,11 +313,16 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
 
     x: (B, 1, D); c_cache: (B, S, kvr); rope_cache: (B, S, dr).
 
-    The absorbed trick contracts ``wkv_b`` per-head (two einsums against
-    the latent cache) rather than as one GEMM, so a packed ``wkv_b``
-    dequantizes transiently inside this step's trace (``_materialize``) —
-    the one documented exception to the fully-packed decode path; the q
-    and output projections stay on ``quant_matmul`` via ``linear``."""
+    The absorbed trick contracts ``wkv_b`` per-head (two contractions
+    against the latent cache) rather than as one GEMM.  A packed
+    ``wkv_b`` stays packed even here: the per-head column views
+    (``mla_latent_weights`` — exact slices of the codes, packing runs
+    along kvr) feed ``quant_matmul_t`` (absorb W_k into q: contraction
+    over dn, output in latent space) and ``quant_matmul`` (expand the
+    latent attention output through W_v), so the last per-step fp weight
+    materialization of the decode path is gone — no
+    ``dequantize_packed`` anywhere in the step trace; the q and output
+    projections stay on ``quant_matmul`` via ``linear`` as before."""
     b, _, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -323,11 +334,31 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
         q = linear(x, p["wq"]).reshape(b, 1, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
-    wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
-    w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
-    # absorb W_k into q: (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
-    q_lat = jnp.einsum("bthd,khd->bthk", q_nope.astype(jnp.float32),
-                       w_k.astype(jnp.float32))
+    if is_packed(p["wkv_b"]):
+        pw_k, pw_v = mla_latent_weights(p["wkv_b"], h, dn, dv)
+
+        def absorb_k(qn):  # (B, 1, H, dn) -> (B, 1, H, kvr)
+            qh = qn.astype(jnp.float32)[:, 0].transpose(1, 0, 2)  # (H, B, dn)
+            lat = jax.vmap(quant_matmul_t)(qh, pw_k)  # (H, B, kvr)
+            return lat.transpose(1, 0, 2)[:, None]
+
+        def expand_v(cl):  # (B, 1, H, kvr) -> (B, 1, H, dv)
+            ch = cl[:, 0].transpose(1, 0, 2)  # (H, B, kvr)
+            out = jax.vmap(functools.partial(quant_matmul, shard=False))(
+                ch, pw_v)
+            return out.transpose(1, 0, 2)[:, None]
+    else:
+        wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
+        w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+
+        def absorb_k(qn):  # (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
+            return jnp.einsum("bthd,khd->bthk", qn.astype(jnp.float32),
+                              w_k.astype(jnp.float32))
+
+        def expand_v(cl):
+            return jnp.einsum("bthk,khd->bthd", cl, w_v.astype(jnp.float32))
+
+    q_lat = absorb_k(q_nope)
     scale = (dn + dr) ** -0.5
     s_lat = jnp.einsum("bthk,bsk->bths", q_lat, c_cache.astype(jnp.float32))
     s_rope = jnp.einsum("bthd,bsd->bths", q_rope.astype(jnp.float32),
@@ -338,7 +369,7 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
     scores = jnp.where(valid, scores, NEG_INF)
     prob = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bths,bsk->bthk", prob, c_cache.astype(jnp.float32))
-    ctx = jnp.einsum("bthk,khd->bthd", ctx_lat, w_v.astype(jnp.float32))
+    ctx = expand_v(ctx_lat)
     y = linear(ctx.reshape(b, 1, h * dv).astype(x.dtype), p["wo"])
     return y
 

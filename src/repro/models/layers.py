@@ -11,9 +11,16 @@ params, ``checkpoint.packed.load_packed_forward_params``) routes through
 the fused dequant-GEMM ``quant_matmul`` without the fp weight ever
 existing.  Every dense projection in lm/attention/moe/ssm calls it, so a
 params pytree holding packed codes jits through prefill and decode
-unchanged.
+unchanged.  Mesh-sharded packed weights carry their (mesh, axis)
+placement in the ``PackedWeight`` aux, so the dispatch needs no
+``ParallelCtx`` plumbing: ``quant_matmul`` wraps the Pallas kernel in
+shard_map over the model axis by itself; only the vmapped expert-stack
+branch opts out (``shard=False`` — shard_map can't nest under vmap) and
+stays on the GSPMD ref.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +36,12 @@ def linear(x: jax.Array, w) -> jax.Array:
     flatten to 2-D around the GEMM (the kernel wrapper itself pads
     decode-time small-m shapes to the sublane tile), and expert-stacked
     weights — leaves with a leading (E,) axis — contract batched, matching
-    ``einsum('ecd,edf->ecf')`` on the fp side."""
+    ``einsum('ecd,edf->ecf')`` on the fp side (per-expert kernel via vmap,
+    with the shard_map mesh route disabled inside the vmap)."""
     if not is_packed(w):
         return x @ w
     if w.w_packed.ndim == 3:  # expert stack: (E, C, d) x (E, ...) per-expert
-        return jax.vmap(quant_matmul)(x, w)
+        return jax.vmap(functools.partial(quant_matmul, shard=False))(x, w)
     if x.ndim == 2:
         return quant_matmul(x, w)
     lead = x.shape[:-1]

@@ -504,6 +504,21 @@ class Model:
             return params["head"]
         return params["embed"].T
 
+    def head_logits(self, params, x: jax.Array) -> jax.Array:
+        """(..., D) hidden states -> (..., V) fp32 logits.
+
+        Tied-embedding models contract the (V, D) table over D directly
+        instead of going through ``head_weight``'s ``embed.T``: with the
+        whole generation fused into one ``lax.scan`` device program
+        (launch.serve), a materialized (D, V) transpose would sit *inside*
+        the per-token loop body — at real vocab sizes that is a
+        full-table-sized copy per generated token."""
+        if "head" in params:
+            return linear(x, params["head"]).astype(jnp.float32)
+        return jax.lax.dot_general(
+            x, params["embed"].astype(x.dtype),
+            (((x.ndim - 1,), (1,)), ((), ()))).astype(jnp.float32)
+
     def loss(self, params, batch) -> jax.Array:
         """batch: {"tokens", "labels", opt "media"/"frames"} -> scalar loss."""
         x, aux = self.hidden_states(params, batch["tokens"],
@@ -515,7 +530,7 @@ class Model:
 
     def logits(self, params, tokens, **kw) -> jax.Array:
         x, _ = self.hidden_states(params, tokens, **kw)
-        return linear(x, self.head_weight(params)).astype(jnp.float32)
+        return self.head_logits(params, x)
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, media=None, frames=None,
@@ -558,8 +573,7 @@ class Model:
 
         x, group_caches = jax.lax.scan(body, x, params["groups"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        last = x[:, -1]
-        logits = linear(last, self.head_weight(params)).astype(jnp.float32)
+        logits = self.head_logits(params, x[:, -1])
         cache = {"groups": group_caches}
         if caches_prefix:
             cache["prefix"] = caches_prefix
@@ -642,7 +656,7 @@ class Model:
                                                cache["groups"]))
         new_cache["groups"] = new_groups
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = linear(x[:, 0], self.head_weight(params)).astype(jnp.float32)
+        logits = self.head_logits(params, x[:, 0])
         return logits, new_cache
 
 

@@ -1,12 +1,26 @@
 """Distributed behaviour on 8 fake host devices (subprocess-isolated so the
-rest of the suite keeps a single device)."""
+rest of the suite keeps a single device).
+
+Every test here builds its mesh with explicit ``axis_types`` /
+``jax.set_mesh`` — API that landed after this container's jax (0.4.37).
+The module probes for it and skips cleanly when absent instead of
+failing, so the suite stays green both locally (old jax, tests skip) and
+in CI (new jax, tests run) — ROADMAP open item 6."""
 import json
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
+import jax
 import pytest
+
+HAS_MESH_API = (hasattr(jax.sharding, "AxisType")
+                and hasattr(jax, "set_mesh"))
+pytestmark = pytest.mark.skipif(
+    not HAS_MESH_API,
+    reason="jax predates jax.sharding.AxisType / jax.set_mesh "
+           f"(found {jax.__version__}); mesh tests run on CI's jax")
 
 REPO = Path(__file__).resolve().parent.parent
 

@@ -69,6 +69,31 @@ def test_quant_matmul_vs_ref(bits, k, n, m, gs):
                                rtol=1e-2)
 
 
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("k,d,m,gs", [(512, 256, 16, 128), (256, 128, 5, 64),
+                                      (128, 512, 3, 128)])
+def test_quant_matmul_t_vs_ref(bits, k, d, m, gs):
+    """Latent layout (y = x @ dequant(W)ᵀ, MLA absorbed decode): kernel
+    (interpret) vs ref vs the dense transposed product.  m covers decode
+    shapes below the sublane tile (padded inside the wrapper)."""
+    from repro.kernels.quant_matmul.ops import quant_matmul_t
+    from repro.kernels.quant_matmul.ref import quant_matmul_t_ref
+
+    w = jax.random.normal(jax.random.key(bits + k), (k, d)) * 0.4
+    spec = QuantSpec(bits=bits, group_size=gs, sym=False)
+    deq, q, s, z = quantize_weight_rtn(w, spec)
+    pw = pack_weight(q, s, z, spec)
+    x = jax.random.normal(jax.random.key(m), (m, d))
+    a = quant_matmul_t(x, pw, use_kernel=True)
+    b = quant_matmul_t_ref(x, pw.w_packed, s, z, bits=bits, group_size=gs,
+                           d_in=k)
+    assert a.shape == (m, k)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(x @ deq.T),
+                               atol=1e-2, rtol=1e-2)
+
+
 @pytest.mark.parametrize("m", [1, 2, 5, 7])
 def test_quant_matmul_decode_shapes_stay_on_kernel(m, monkeypatch):
     """Decode-time m (batch of generating sequences, not a sublane

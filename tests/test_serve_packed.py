@@ -6,10 +6,15 @@ The keep-packed serving path (``checkpoint.packed.load_packed_forward_params``
 dequantize-at-load path, while never creating an fp array of any quantized
 weight's full shape: the guard instruments ``quantizer.dequantize_packed``
 and ``checkpoint.packed.dequantize_entry`` and pins both to zero calls
-during ``generate``.  Runs on the single local device here and on the fake
-8-device (2 data x 4 model) mesh in a subprocess (like test_distributed),
-where it additionally checks the codes land model-axis sharded and the fp
-residual writes per addressable shard with no controller gather.
+during ``generate`` — since PR 5 with *no* exceptions: MLA's absorbed
+decode contracts packed codes through the latent-layout kernels instead
+of transiently dequantizing ``wkv_b`` per step.  Runs on the single local
+device here and on the fake 8-device (2 data x 4 model) mesh in
+subprocesses (like test_distributed): one mesh test pins the GSPMD-ref
+serving semantics (sharded codes, sharded residual write-back), a second
+pins the shard_map'd Pallas route — with the kernel forced, mesh-sharded
+serving must take the per-shard fused kernel with *zero* ref-GEMM
+fallbacks and bit-identical outputs vs the GSPMD ref.
 
 This test also *replaces* ``launch.serve._kernel_check`` (one projection
 driven through the kernel): every 2-D artifact entry is cross-checked
@@ -76,9 +81,12 @@ class _Guard:
 def test_packed_forward_parity_other_families(arch, tmp_path, monkeypatch):
     """Pin the non-GQA dispatch branches: deepseek-v2 smoke exercises the
     expert-stack vmapped quant_matmul (3-D PackedWeight) *and* MLA's
-    absorbed decode (``attention._materialize``, the one transient-dequant
-    exception — excluded from the zero-dequant guard here); jamba smoke
-    exercises the mamba projections."""
+    absorbed decode — since PR 5 that path contracts the packed codes
+    through the latent-layout ``quant_matmul_t``/``quant_matmul``
+    (``mla_latent_weights`` per-head views), so the zero-dequant guard
+    now covers MLA too: not a single ``dequantize_packed`` anywhere in
+    the decode trace (``_materialize`` used to be the one documented
+    exception); jamba smoke exercises the mamba projections."""
     import dataclasses
 
     from repro.configs import get_config
@@ -105,7 +113,9 @@ def test_packed_forward_parity_other_families(arch, tmp_path, monkeypatch):
                        is_leaf=lambda x: isinstance(x, PackedWeight)))
     prompts = corpus.sample(jax.random.key(2), 2, 16)
     ref_tokens = generate(model, deq_params, prompts, 6)
+    guard = _Guard(monkeypatch)
     pk_tokens = generate(model, pk_params, prompts, 6)
+    assert guard.calls == [], guard.calls
     assert bool(jnp.all(ref_tokens == pk_tokens))
 
 
@@ -307,4 +317,109 @@ def test_packed_forward_parity_on_mesh():
     # opaque Pallas call (GSPMD would all-gather it) even on TPU
     assert out["mesh_sharded_flags_set"]
     assert out["dequant_calls"] == 0
+    assert out["tokens_equal"]
+
+
+def test_shard_map_kernel_route_on_mesh():
+    """Mesh-sharded packed serving on the shard_map'd Pallas kernel.
+
+    Two layers of pinning on the fake (2 data x 4 model) mesh, kernel
+    forced via REPRO_QMM_KERNEL=1 (interpret-mode Pallas on CPU — the
+    correctness tool; on TPU the same route runs compiled):
+
+      * unit: a synthetic d_out-sharded PackedWeight through the
+        shard_map kernel route is BIT-identical to the GSPMD ref GEMM,
+        stays d_out-sharded on the model axis, and triggers zero ref
+        calls.
+      * serving: a kernel-aligned smoke model (every quantized d_out
+        splits into 128-aligned local tiles over the 4-way model axis)
+        generates keep-packed with zero ref-GEMM fallbacks — mesh-sharded
+        codes no longer demote to the ref when the kernel policy allows —
+        and greedy tokens equal to the local dequantized forward.
+    """
+    out = _run("""
+    import dataclasses, functools, json, os, tempfile
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    os.environ["REPRO_QMM_KERNEL"] = "1"
+
+    from repro.configs import get_config
+    from repro.core import RSQConfig, RSQPipeline
+    from repro.core.quantizer import QuantSpec, quantize_weight_rtn, pack_codes
+    from repro.data.synthetic import SyntheticCorpus
+    from repro.kernels.quant_matmul import ops
+    from repro.models import build_model
+    from repro.runtime.sharding import ParallelCtx
+    from repro.checkpoint import packed as cp
+    from repro.launch.serve import generate
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, dp=("data",), tp="model")
+
+    # ---- unit: synthetic sharded weight, kernel route vs GSPMD ref
+    k, n = 256, 1024
+    w = jax.random.normal(jax.random.key(0), (k, n), jnp.float32)
+    deq, q, scale, zero = quantize_weight_rtn(
+        w, QuantSpec(bits=4, group_size=128, sym=False))
+    sh = NamedSharding(mesh, P(None, "model"))
+    pw = ops.PackedWeight(
+        jax.device_put(pack_codes(q, 4), sh), jax.device_put(scale, sh),
+        jax.device_put(zero, sh), 4, 128, k,
+        mesh_sharded=True, mesh=mesh, mesh_axis="model")
+    x = jax.random.normal(jax.random.key(1), (5, k), jnp.float32)
+    y_ref = ops.quant_matmul(x, pw, use_kernel=False)
+    ref_calls, pallas_calls = [], []
+    orig_ref, orig_pal = ops.quant_matmul_ref, ops.quant_matmul_pallas
+    ops.quant_matmul_ref = lambda *a, **kw: (ref_calls.append(1),
+                                             orig_ref(*a, **kw))[1]
+    ops.quant_matmul_pallas = lambda *a, **kw: (pallas_calls.append(1),
+                                                orig_pal(*a, **kw))[1]
+    y_kernel = ops.quant_matmul(x, pw)  # policy: forced kernel + shard_map
+    unit = {
+        "unit_ref_calls": len(ref_calls),
+        "unit_pallas_called": len(pallas_calls) > 0,
+        "unit_bit_identical": bool(jnp.all(y_kernel == y_ref)),
+        "unit_out_model_sharded": "model" in str(y_kernel.sharding.spec),
+    }
+
+    # ---- serving: kernel-aligned smoke model end to end
+    cfg = dataclasses.replace(
+        get_config("llama3-8b").reduced(), dtype="float32", n_layers=2,
+        d_model=512, n_heads=8, n_kv_heads=8, d_head=0, d_ff=512,
+        vocab_size=256)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    corpus = SyntheticCorpus(vocab_size=256, seed=0)
+    calib = corpus.sample(jax.random.key(1), 8, 32)
+    pipe = RSQPipeline(model, RSQConfig(bits=4, rotate=False,
+                                        importance="attn_con",
+                                        pack_output=True,
+                                        pack_writeback="sharded"), ctx=ctx)
+    qa, _ = pipe.run(params, calib, batch_size=4)
+    d = tempfile.mkdtemp()
+    cp.save_packed_artifact(d, pipe.artifact, params=qa)
+    deq_params, _ = cp.load_packed_params(d)
+    prompts = corpus.sample(jax.random.key(2), 2, 16)
+    ref_tokens = generate(model, deq_params, prompts, 8)
+
+    model_m = build_model(cfg, ctx)
+    pk_params, _ = cp.load_packed_forward_params(d, ctx=ctx)
+    ref_calls.clear(); pallas_calls.clear()
+    pk_tokens = generate(model_m, pk_params, prompts, 8)
+    ops.quant_matmul_ref, ops.quant_matmul_pallas = orig_ref, orig_pal
+
+    print(json.dumps({**unit,
+        "serve_ref_fallbacks": len(ref_calls),
+        "serve_pallas_traces": len(pallas_calls),
+        "tokens_equal": bool(jnp.all(ref_tokens == pk_tokens)),
+    }))
+    """)
+    assert out["unit_ref_calls"] == 0
+    assert out["unit_pallas_called"]
+    assert out["unit_bit_identical"]
+    assert out["unit_out_model_sharded"]
+    # the whole serving forward rides the shard_map'd kernel: zero ref
+    # GEMMs traced during keep-packed generate
+    assert out["serve_ref_fallbacks"] == 0
+    assert out["serve_pallas_traces"] > 0
     assert out["tokens_equal"]
