@@ -19,6 +19,13 @@ Two axes, both on a tiny multi-layer homogeneous model:
     concurrent compile prewarm (a no-op on the CPU backend, whose
     compilations serialize process-wide).
 
+A third, informational axis: **checkpoint overhead** — the same warm
+pipeline driven through ``core.resume.QuantizeRunner`` with the densest
+cadence (``save_every_layers=1``), reporting ``ckpt_overhead_s`` (time in
+commit bookkeeping + layer-solve checkpoint saves) next to the plain warm
+wall time, so the cost of fault tolerance stays a measured number rather
+than folklore.
+
 Results land in ``BENCH_pipeline.json`` at the repo root so future PRs
 have a perf trajectory to regress against.  Timings are split into
 compile-inclusive cold fields (``cold_total_s``/``compile_s`` —
@@ -131,6 +138,40 @@ def _warm_schedulers() -> dict:
     }
 
 
+def _ckpt_overhead() -> dict:
+    """Warm wall time with vs without layer-solve checkpointing at the
+    densest cadence (every layer, + the blocking stack-final save).  Both
+    runs reuse one compiled pipeline, so the delta is pure runner cost:
+    host syncs for the JSON report, npz serialization, atomic renames."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.resume import QuantizeRunner
+
+    model, params, calib = _toy_model()
+    rsq = RSQConfig(bits=4, rotate=False, importance="attn_con",
+                    scheduler="sequential")
+    pipe = RSQPipeline(model, rsq)
+    pipe.run(params, calib, batch_size=BATCH)  # compile warm-up
+    t0 = time.perf_counter()
+    q, _ = pipe.run(params, calib, batch_size=BATCH)
+    jax.block_until_ready(jax.tree.leaves(q))
+    plain_s = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as td:
+        runner = QuantizeRunner(pipe, CheckpointManager(td),
+                                save_every_layers=1, resume=False)
+        t0 = time.perf_counter()
+        q, _ = runner.run(params, calib, batch_size=BATCH)
+        jax.block_until_ready(jax.tree.leaves(q))
+        runner_s = time.perf_counter() - t0
+    return {
+        "save_every_layers": 1,
+        "plain_steady_s": round(plain_s, 4),
+        "runner_steady_s": round(runner_s, 4),
+        "ckpt_overhead_s": round(runner.ckpt_overhead_s, 4),
+    }
+
+
 def run(table: Table | None = None):
     table = table or Table("pipeline")
     model, params, calib = _toy_model()
@@ -169,10 +210,19 @@ def run(table: Table | None = None):
               f"speedup={overlap_speedup:.2f}x "
               f"blocking_syncs={N_LAYERS}:1")
 
+    ckpt = _ckpt_overhead()
+    table.add("ckpt_overhead", ckpt["ckpt_overhead_s"] * 1e6,
+              f"ckpt_overhead_s={ckpt['ckpt_overhead_s']} "
+              f"plain_s={ckpt['plain_steady_s']} "
+              f"runner_s={ckpt['runner_steady_s']}")
+
     payload = {"fused": fused, "baseline": base,
                "speedup": round(speedup, 3),
                "schedulers": schedulers,
                "overlap_speedup": round(overlap_speedup, 3),
+               # informational (no regression gate): cost of layer-solve
+               # checkpointing at the densest cadence
+               "ckpt_overhead": ckpt,
                # structural per-run count (deterministic, backend-free):
                # host syncs that block further dispatch — once per layer
                # lock-step vs one end-of-stack drain overlapped

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import CheckpointManager  # noqa: F401
 from repro.checkpoint.packed import (  # noqa: F401
+    ArtifactCorruptError,
     load_packed_artifact,
     load_packed_forward_params,
     load_packed_params,

@@ -2,7 +2,13 @@
 
   * atomic     — write into ``<dir>/tmp.<step>`` then ``os.rename`` to
                  ``step_<n>``; a crash mid-write never corrupts the latest
-                 checkpoint (rename is atomic on POSIX).
+                 checkpoint (rename is atomic on POSIX).  Within the temp
+                 dir the npz payload itself is written to a ``.tmp`` path
+                 and atomically renamed, and a terminal ``DONE`` marker is
+                 the *last* file written before the dir rename —
+                 ``latest_step()`` ignores any step dir without it, so a
+                 half-written step (crash mid-rename on a non-atomic
+                 filesystem, or a copied/partial dir) is never restored.
   * async      — device->host transfer happens on the caller thread (cheap,
                  and consistent with the step), serialization + fsync on a
                  background thread so training never blocks on disk.
@@ -67,8 +73,14 @@ class CheckpointManager:
                 if tmp.exists():
                     shutil.rmtree(tmp)
                 tmp.mkdir(parents=True)
-                np.savez(tmp / "arrays.npz", **arrays)
-                (tmp / "meta.json").write_text(json.dumps(meta))
+                # npz to a temp path + atomic rename: a crash mid-savez
+                # can never leave a truncated arrays.npz behind
+                np.savez(tmp / "arrays.tmp.npz", **arrays)
+                os.replace(tmp / "arrays.tmp.npz", tmp / "arrays.npz")
+                (tmp / "meta.tmp.json").write_text(json.dumps(meta))
+                os.replace(tmp / "meta.tmp.json", tmp / "meta.json")
+                # terminal marker: written last, checked by all_steps()
+                (tmp / "DONE").write_text("ok")
                 final = self.dir / f"step_{step:010d}"
                 if final.exists():
                     shutil.rmtree(final)
@@ -102,7 +114,12 @@ class CheckpointManager:
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
-        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        """Completed steps only: a dir without the terminal ``DONE``
+        marker is half-written (crashed mid-save) and is never offered
+        for restore."""
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.dir.glob("step_*")
+                      if (p / "DONE").exists())
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
@@ -118,6 +135,10 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:010d}"
+        if d.exists() and not (d / "DONE").exists():
+            raise FileNotFoundError(
+                f"checkpoint {d} is half-written (no DONE marker); it was "
+                f"interrupted mid-save — restore an earlier step")
         meta = json.loads((d / "meta.json").read_text())
         with np.load(d / "arrays.npz") as z:
             arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]

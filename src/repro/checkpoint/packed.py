@@ -24,11 +24,25 @@ reloads that artifact:
     the codes stay packed in HBM and the model's ``linear`` dispatcher
     feeds them straight to the ``quant_matmul`` kernel.
 
+Durability (format v3)
+----------------------
+Artifacts are *atomic and verified*: every file is written to a temp path
+and ``os.replace``'d into place (a crash mid-save never leaves a truncated
+artifact where a loader could find it), the npz payloads are written with
+canonical zip metadata (fixed timestamps, stored entries) so two runs that
+produce the same arrays produce **byte-identical files** — the contract the
+kill-and-resume parity tests pin — and ``meta.json`` records the SHA-256 of
+each payload file.  Loaders verify the checksum before deserializing and
+raise :class:`ArtifactCorruptError` with an actionable message on mismatch
+(``verify=False`` / ``launch.serve --no-verify`` opts out); v2/v1 artifacts
+predate the checksum contract and load unverified.
+
 On-disk layout (``<dir>/``):
 
-  meta.json     — format tag, quant spec, per-entry metadata (d_in,
-                  group_size, dtype, layer location) and the shard index
-                  map of every saved field — packed *and* residual
+  meta.json     — format tag, quant spec, per-file sha256 checksums,
+                  per-entry metadata (d_in, group_size, dtype, layer
+                  location) and the shard index map of every saved field —
+                  packed *and* residual
   packed.npz    — ``"<entry>/<field>@<k>"`` -> the k-th shard's local data
   residual.npz  — the unquantized remainder of the param tree (norms,
                   routers, embeddings, ...) with quantized leaves replaced
@@ -40,9 +54,12 @@ On-disk layout (``<dir>/``):
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import pickle
+import zipfile
 from pathlib import Path
 from typing import Any, Optional
 
@@ -54,9 +71,69 @@ from repro.core.quantizer import dequantize_packed
 from repro.kernels.quant_matmul.ops import PackedWeight
 from repro.runtime.sharding import LOCAL, ParallelCtx
 
-FORMAT = "rsq-packed-v2"  # v2: residual leaves are shard-indexed like codes
-_READABLE = (FORMAT, "rsq-packed-v1")  # v1 differs only in residual layout
+FORMAT = "rsq-packed-v3"  # v3: per-file sha256 checksums + atomic,
+# byte-deterministic writes (v2: shard-indexed residual; v1: whole-leaf)
+_READABLE = (FORMAT, "rsq-packed-v2", "rsq-packed-v1")
 _FIELDS = ("codes", "scale", "zero")
+
+
+class ArtifactCorruptError(RuntimeError):
+    """A packed artifact file failed its recorded SHA-256 check."""
+
+
+def _sha256_file(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _savez_atomic(path: Path, arrays: dict) -> str:
+    """Write ``arrays`` as an npz at ``path`` atomically (temp file +
+    ``os.replace``) and *canonically*: fixed zip timestamps and stored
+    (uncompressed) members, so identical arrays written in identical
+    order produce byte-identical files — ``np.savez`` stamps the current
+    time into each zip header, which would break the resumed-vs-
+    uninterrupted byte-parity contract.  Members are serialized one at a
+    time (like ``np.savez``), so host memory still holds at most one
+    shard's bytes beyond the write buffer.  Returns the file's sha256."""
+    from numpy.lib import format as npformat
+
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with zipfile.ZipFile(tmp, "w", zipfile.ZIP_STORED,
+                         allowZip64=True) as zf:
+        for name, arr in arrays.items():
+            buf = io.BytesIO()
+            npformat.write_array(buf, np.asarray(arr), allow_pickle=False)
+            zi = zipfile.ZipInfo(name + ".npy",
+                                 date_time=(1980, 1, 1, 0, 0, 0))
+            zi.compress_type = zipfile.ZIP_STORED
+            zi.external_attr = 0o600 << 16
+            zf.writestr(zi, buf.getvalue())
+    sha = _sha256_file(tmp)
+    os.replace(tmp, path)
+    return sha
+
+
+def _verify_file(d: Path, meta: dict, fname: str) -> None:
+    """Check ``fname`` against the checksum recorded in ``meta``.
+
+    Only v3 artifacts carry the checksum contract; earlier formats load
+    unverified (they predate it)."""
+    checksums = meta.get("checksums")
+    if meta.get("format") != FORMAT or not checksums or fname not in checksums:
+        return
+    got = _sha256_file(d / fname)
+    want = checksums[fname]
+    if got != want:
+        raise ArtifactCorruptError(
+            f"{d / fname} is corrupt: sha256 {got[:16]}… does not match the "
+            f"recorded {want[:16]}….  The artifact was truncated or "
+            f"bit-flipped after save — re-run `launch.quantize --pack-out "
+            f"{d}` to regenerate it, or pass verify=False "
+            f"(launch.serve --no-verify) to serve it anyway at your own "
+            f"risk.")
 
 
 def _host_gather(x) -> np.ndarray:
@@ -131,7 +208,8 @@ def save_packed_artifact(directory, artifact: dict, *,
         meta_entries[name] = em
 
     meta = {"format": FORMAT, "spec": artifact["spec"],
-            "entries": meta_entries, "extra": extra or {}}
+            "entries": meta_entries, "extra": extra or {},
+            "checksums": {}}
     if params is not None:
         residual = _strip_quantized(params, meta_entries)
         leaves, treedef = jax.tree_util.tree_flatten(residual)
@@ -141,13 +219,14 @@ def save_packed_artifact(directory, artifact: dict, *,
             for i, leaf in enumerate(leaves)
         ]
         meta["residual_treedef"] = pickle.dumps(treedef).hex()
-        tmp = d / "residual.tmp.npz"
-        np.savez(tmp, **res_arrays)
-        os.rename(tmp, d / "residual.npz")
-    tmp = d / "packed.tmp.npz"  # savez appends .npz to other suffixes
-    np.savez(tmp, **arrays)
-    os.rename(tmp, d / "packed.npz")
-    (d / "meta.json").write_text(json.dumps(meta))
+        meta["checksums"]["residual.npz"] = _savez_atomic(
+            d / "residual.npz", res_arrays)
+    meta["checksums"]["packed.npz"] = _savez_atomic(d / "packed.npz", arrays)
+    # meta.json last and atomically: its presence with checksums implies
+    # the payload files it describes are complete
+    tmp = d / "meta.tmp.json"
+    tmp.write_text(json.dumps(meta))
+    os.replace(tmp, d / "meta.json")
     return d
 
 
@@ -191,31 +270,41 @@ def _assemble_entry(z, name: str, em: dict) -> dict:
             for field, fm in em["fields"].items()}
 
 
-def load_packed_artifact(directory) -> tuple[dict, dict]:
+def load_packed_artifact(directory, *, verify: bool = True
+                         ) -> tuple[dict, dict]:
     """-> (entries, meta): per-entry assembled numpy ``codes/scale/zero``.
 
     Host memory holds only the packed representation; dequantization is the
-    caller's (device-side) concern."""
+    caller's (device-side) concern.  ``verify`` (default) checks
+    ``packed.npz`` against the sha256 recorded in meta.json (v3 artifacts)
+    and raises :class:`ArtifactCorruptError` on mismatch rather than
+    serving silently corrupt codes."""
     d = Path(directory)
     meta = json.loads((d / "meta.json").read_text())
     assert meta["format"] in _READABLE, \
         f"unreadable artifact format {meta['format']!r}; " \
         f"re-run launch.quantize --pack-out (readable: {_READABLE})"
+    if verify:
+        _verify_file(d, meta, "packed.npz")
     with np.load(d / "packed.npz") as z:
         entries = {name: _assemble_entry(z, name, em)
                    for name, em in meta["entries"].items()}
     return entries, meta
 
 
-def load_packed_entry(directory, name: str) -> dict:
+def load_packed_entry(directory, name: str, *, verify: bool = False) -> dict:
     """Assemble a single entry's ``codes/scale/zero`` (npz members load
     lazily, so this reads just that weight's shards — handy for spot checks
-    against a large artifact)."""
+    against a large artifact).  ``verify=True`` hashes the *whole*
+    packed.npz first, which defeats the lazy read — default off here, on
+    for the full-artifact loaders."""
     d = Path(directory)
     meta = json.loads((d / "meta.json").read_text())
     assert meta["format"] in _READABLE, \
         f"unreadable artifact format {meta['format']!r}; " \
         f"re-run launch.quantize --pack-out (readable: {_READABLE})"
+    if verify:
+        _verify_file(d, meta, "packed.npz")
     with np.load(d / "packed.npz") as z:
         return _assemble_entry(z, name, meta["entries"][name])
 
@@ -229,10 +318,12 @@ def dequantize_entry(entry: dict, em: dict, spec: dict) -> jax.Array:
     return w.astype(em.get("dtype", "float32"))
 
 
-def _load_residual(directory, meta: dict) -> Any:
+def _load_residual(directory, meta: dict, *, verify: bool = True) -> Any:
     """Reassemble the fp residual tree from its per-shard members
     (v1 artifacts stored each leaf whole — load those as-is)."""
     d = Path(directory)
+    if verify:
+        _verify_file(d, meta, "residual.npz")
     with np.load(d / "residual.npz") as z:
         if "residual_leaves" in meta:
             leaves = [_assemble_field(z, f"leaf_{i}", fm)
@@ -269,17 +360,18 @@ def _stacked_slots(params: Any, meta: dict):
         yield node, leaf, em, {g: per_layer[g] for g in range(n)}
 
 
-def load_packed_params(directory) -> tuple[Any, dict]:
+def load_packed_params(directory, *, verify: bool = True) -> tuple[Any, dict]:
     """-> (params, meta): a complete *dequantized* param tree for serving.
 
     The fp residual loads as saved; every quantized weight is rebuilt on
     device from its packed entry (group layers re-stack their per-layer
     entries along the stacked axis) — the unpacked weight never exists on
     host.  For packed-in-HBM serving (no fp weight anywhere) use
-    :func:`load_packed_forward_params` instead."""
+    :func:`load_packed_forward_params` instead.  ``verify`` checks both
+    payload files against their recorded sha256 (v3) before loading."""
     d = Path(directory)
-    entries, meta = load_packed_artifact(d)
-    params = _load_residual(d, meta)
+    entries, meta = load_packed_artifact(d, verify=verify)
+    params = _load_residual(d, meta, verify=verify)
     for node, leaf, em, per_layer in _stacked_slots(params, meta):
         ws = [dequantize_entry(entries[per_layer[g]], em, meta["spec"])
               for g in sorted(per_layer, key=lambda g: -1 if g is None else g)]
@@ -288,8 +380,8 @@ def load_packed_params(directory) -> tuple[Any, dict]:
     return params, meta
 
 
-def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL,
-                               ) -> tuple[Any, dict]:
+def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL, *,
+                               verify: bool = True) -> tuple[Any, dict]:
     """-> (params, meta): serving params with the codes *kept packed in HBM*.
 
     Every quantized matrix lands in the tree as a ``PackedWeight`` pytree
@@ -312,10 +404,15 @@ def load_packed_forward_params(directory, ctx: ParallelCtx = LOCAL,
     layout: output-dim sharded weights, no per-token weight gathers) and
     the ``PackedWeight`` carries the (mesh, axis) placement in its aux, so
     ``quant_matmul`` can run the fused Pallas kernel per shard under
-    ``shard_map`` instead of demoting sharded codes to the ref GEMM."""
+    ``shard_map`` instead of demoting sharded codes to the ref GEMM.
+
+    ``verify`` (default) checks each payload file against the sha256
+    recorded in meta.json before deserializing — a truncated or bit-
+    flipped artifact fails with :class:`ArtifactCorruptError` instead of
+    serving garbage codes."""
     d = Path(directory)
-    entries, meta = load_packed_artifact(d)
-    params = _load_residual(d, meta)
+    entries, meta = load_packed_artifact(d, verify=verify)
+    params = _load_residual(d, meta, verify=verify)
     spec = meta["spec"]
 
     def put(a: np.ndarray) -> tuple[jax.Array, bool]:

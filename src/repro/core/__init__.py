@@ -18,6 +18,7 @@ _LAZY = {
     "RSQConfig": "repro.core.pipeline",
     "RSQPipeline": "repro.core.pipeline",
     "quantize_model": "repro.core.pipeline",
+    "QuantizeRunner": "repro.core.resume",
     "random_hadamard": "repro.core.rotation",
     "rotate_model": "repro.core.rotation",
     "SCHEDULERS": "repro.core.scheduler",

@@ -286,10 +286,16 @@ class _LayerFns:
 
 @dataclasses.dataclass(frozen=True)
 class LayerTask:
-    """One unit of scheduler work: quantize one block (original params)."""
+    """One unit of scheduler work: quantize one block (original params).
+
+    ``index`` is the task's global position in the decoder stack — the
+    coordinate the fault-injection (``stage_point``) and checkpointing
+    (``layer_commit``) hooks key on.  ``None`` (encoder tasks) opts the
+    task out of both."""
     tag: str
     p_blk: Any
     meta: Any
+    index: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -337,6 +343,14 @@ class RSQPipeline:
         self._layer_fns: dict[Any, _LayerFns] = {}
         self._prewarm: dict[Any, Any] = {}  # layer key -> compile future
         self._rc: Optional[_RunCtx] = None
+        # fault-tolerance state (per run): an optional FaultPlan checked at
+        # every stage_point, an optional commit callback (QuantizeRunner),
+        # restored Hessian accumulators keyed by layer index, and the last
+        # decoder index (marks the commit that completes the stack)
+        self._fault = None
+        self._commit_cb: Optional[Callable] = None
+        self._resume_hess: dict[int, dict] = {}
+        self._last_index: Optional[int] = None
         # retraces of the cached capture/apply programs; a homogeneous
         # L-layer stack should end a run at 1/1, not L/L.  The lock keeps
         # the counts exact when prewarm traces programs on worker threads.
@@ -393,10 +407,36 @@ class RSQPipeline:
             outs.append(a)
         return tuple(outs)
 
-    def _collect_packed(self, tag: str, collect: dict) -> None:
+    def _put_act(self, a):
+        """Re-place one restored (host) activation batch for resume: leading
+        batch axis back onto the mesh's data axes when divisible, so the
+        resumed run's capture/apply programs see the same input layout (and
+        therefore compile to the same partitioning) as the run that died."""
+        a = jnp.asarray(a)
+        ctx = self.ctx
+        if ctx.enabled and ctx.dp and a.shape[0] % ctx.axis_size("dp") == 0:
+            a = jax.device_put(
+                a, ctx.sharding("dp", *([None] * (a.ndim - 1))))
+        return a
+
+    def _put_entry(self, a):
+        """Re-place one restored packed-artifact tensor onto the model axis
+        (mirrors ``_pack_sharded``'s constraint) so the per-addressable-shard
+        artifact save emits the identical shard layout after a resume."""
+        a = jnp.asarray(a)
+        ctx = self.ctx
+        if (ctx.enabled and ctx.tp
+                and a.shape[-1] % ctx.axis_size("tp") == 0):
+            a = jax.device_put(
+                a, ctx.sharding(*([None] * (a.ndim - 1)), "tp"))
+        return a
+
+    def _collect_packed(self, task: LayerTask, collect: dict) -> None:
         """Fold one layer's solve outputs into the serving artifact."""
         from repro.checkpoint.packed import _host_gather
 
+        self.stage_point(task.index, "pack")
+        tag = task.tag
         for path, sol in collect.items():
             q, scale, zero = sol["q"], sol["scale"], sol["zero"]
             if self.rsq.pack_writeback == "host":
@@ -532,6 +572,34 @@ class RSQPipeline:
         self._prewarm = {key: ex.submit(build, task) for key, task in jobs}
         ex.shutdown(wait=False)
 
+    def stage_point(self, index: Optional[int], stage: str,
+                    batch: Optional[int] = None) -> None:
+        """Per-stage dispatch boundary (see ``core/scheduler`` docstring).
+        No-op unless a ``FaultPlan`` was passed to ``run`` — then an armed
+        ``(layer, stage[, batch])`` coordinate raises here."""
+        if self._fault is not None and index is not None:
+            self._fault.check(index, stage, batch)
+
+    def layer_commit(self, task: LayerTask, state: dict, p_new, acts,
+                     next_state: Optional[dict] = None) -> None:
+        """Durable-progress hook, called once per layer after its apply
+        sweep is dispatched.  Forwards everything a checkpointing runner
+        needs: the solved params, the propagated activations (= the next
+        layer's inputs), the artifact entries folded so far, and — under
+        the overlapped schedule — the next layer's already-complete Hessian
+        accumulators.  No-op without a runner."""
+        if self._commit_cb is None or task.index is None:
+            return
+        nh, nidx = None, None
+        if next_state is not None and next_state.get("hessians") is not None:
+            nh = next_state["hessians"]
+            nidx = next_state["task"].index
+        self._commit_cb(
+            index=task.index, state=state, p_new=p_new, acts=acts,
+            art_entries=self._art_entries, art_meta=self._art_meta,
+            next_hessians=nh, next_index=nidx,
+            last=task.index == self._last_index)
+
     def layer_begin(self, task: LayerTask, acts) -> dict:
         """Resolve the trace-cached programs and fresh accumulators."""
         rc = self._rc
@@ -540,12 +608,30 @@ class RSQPipeline:
         if fut is not None:
             fut.result()  # join the background compile; fns now cached
         fns = self._get_layer_fns(task.meta, task.p_blk, acts[0], med0)
-        return {"task": task, "fns": fns, "hessians": fns.hess_init(),
-                "t0": time.perf_counter(), "pending": None}
+        st = {"task": task, "fns": fns,
+              "t0": time.perf_counter(), "pending": None}
+        rh = (self._resume_hess.pop(task.index, None)
+              if task.index is not None else None)
+        if rh is None:
+            st["hessians"] = fns.hess_init()
+        else:
+            # checkpointed accumulators (exact float32 partial sums): put
+            # them back in the streaming layout and skip the capture sweep
+            hs = {}
+            for p_, a in rh.items():
+                a = jnp.asarray(a)
+                if self.n_hshards > 1:
+                    a = self.ctx.shard_leading(a)
+                hs[p_] = a
+            st["hessians"] = hs
+            st["capture_done"] = True
+        return st
 
     def layer_capture(self, state: dict, bi: int, x_b) -> None:
         """Fused capture+importance+accumulate for one calibration batch
         (the Hessian dict is donated, so state updates in place)."""
+        if state.get("capture_done"):  # accumulators restored from a
+            return                     # checkpoint — nothing to add
         rc = self._rc
         med = rc.media_b[bi] if rc.media_b is not None else None
         tok = rc.calib[bi * rc.batch_size : bi * rc.batch_size + x_b.shape[0]]
@@ -569,7 +655,7 @@ class RSQPipeline:
             state["task"].p_blk, hessians, self.rsq, defer=True,
             collect=collect)
         if collect:
-            self._collect_packed(state["task"].tag, collect)
+            self._collect_packed(state["task"], collect)
         return p_new
 
     def layer_apply(self, state: dict, p_new, bi: int, x_b):
@@ -602,8 +688,23 @@ class RSQPipeline:
 
     # ----------------------------------------------------------------- main
     def run(self, params: dict, calib_tokens, *, batch_size: int = 8,
-            media=None, frames=None, verbose: bool = False):
+            media=None, frames=None, verbose: bool = False,
+            fault=None, commit: Optional[Callable] = None,
+            resume: Optional[dict] = None):
         """Quantize `params`. calib_tokens: (N, T) int32 (pre-expansion).
+
+        Fault tolerance (see ``core.resume.QuantizeRunner``, which drives
+        all three):
+          * ``fault`` — a ``runtime.fault.FaultPlan``; armed
+            ``(layer, stage)`` coordinates raise at that dispatch boundary.
+          * ``commit`` — callback invoked once per decoder layer with the
+            solved params, propagated acts, artifact entries and (overlapped
+            schedule) the next layer's complete Hessians.
+          * ``resume`` — progress restored from a checkpoint:
+            ``{"start", "solved", "acts", "art", "art_meta", "hessians",
+            "reports"}``; layers below ``start`` are skipped and the stack
+            continues from the restored activations, bit-identical to a run
+            that never died.
 
         Returns (new_params, report)."""
         model, cfg, rsq = self.model, self.cfg, self.rsq
@@ -612,6 +713,12 @@ class RSQPipeline:
         # same pipeline legitimately contribute 0 traces to this run)
         self.trace_counts.update(capture=0, apply=0)
         self._art_entries, self._art_meta, self.artifact = {}, {}, None
+        self._fault, self._commit_cb = fault, commit
+        self._resume_hess, self._last_index = {}, None
+        if resume is not None and cfg.family == "encdec":
+            raise NotImplementedError(
+                "resume covers the decoder stack only; encoder-decoder "
+                "calibration restarts from scratch")
         tag2loc: dict[str, tuple] = {}
         report: dict[str, Any] = {"layers": {}, "rsq": dataclasses.asdict(rsq)}
         scheduler = get_scheduler(rsq.scheduler)
@@ -690,11 +797,42 @@ class RSQPipeline:
         tasks, locs = [], []
         for li in range(n_layers):
             p_blk, meta, loc = layer_params(li)
-            tasks.append(LayerTask(tag=f"layer{li}", p_blk=p_blk, meta=meta))
+            tasks.append(LayerTask(tag=f"layer{li}", p_blk=p_blk, meta=meta,
+                                   index=li))
             locs.append(loc)
+        self._last_index = n_layers - 1
+        start, pre_outs = 0, []
+        if resume is not None:
+            start = int(resume["start"])
+            solved = {int(k): v for k, v in resume["solved"].items()}
+            assert sorted(solved) == list(range(start)), (
+                f"resume state is not a contiguous solved prefix: "
+                f"{sorted(solved)} vs start={start}")
+            reps = resume.get("reports") or {}
+            for li in range(start):
+                p_new = jax.tree.map(jnp.asarray, solved[li])
+                rep = dict(reps.get(f"layer{li}")
+                           or {"weights": {}, "seconds": 0.0})
+                rep["resumed"] = True
+                pre_outs.append((p_new, rep))
+            # re-place the already-solved layers' propagated activations —
+            # the scheduler continues the stack from these
+            acts = [self._put_act(a) for a in resume["acts"]]
+            # packed entries folded before the crash: restore in artifact
+            # order (art_meta, carried through JSON, preserves insertion
+            # order; the checkpointed array tree does not)
+            for name, em in (resume.get("art_meta") or {}).items():
+                self._art_meta[name] = dict(em)
+                self._art_entries[name] = {
+                    k: self._put_entry(v)
+                    for k, v in resume["art"][name].items()}
+            for li, hs in (resume.get("hessians") or {}).items():
+                self._resume_hess[int(li)] = hs
         # nothing consumes the last decoder layer's outputs — skip its
         # apply pass (one full batch sweep of dispatched-and-discarded work)
-        acts, outs = scheduler.run(self, tasks, acts, propagate_last=False)
+        acts, outs = scheduler.run(self, tasks[start:], acts,
+                                   propagate_last=False)
+        outs = pre_outs + outs
         for task, loc, (p_new, rep) in zip(tasks, locs, outs):
             tag2loc[task.tag] = loc
             report["layers"][task.tag] = rep
@@ -712,6 +850,7 @@ class RSQPipeline:
                 new_params["groups"] = stacked
 
         self._rc = None
+        self._fault = self._commit_cb = None
         if rsq.pack_output:
             for name, em in self._art_meta.items():
                 em["loc"] = list(tag2loc[em["tag"]])

@@ -1,0 +1,201 @@
+"""Resumable quantization: layer-granular checkpoints for the RSQ pipeline.
+
+``QuantizeRunner`` generalizes the training-side ``runtime.fault.StepRunner``
+to the calibrate->solve->pack pipeline.  The unit of durable progress is one
+*layer solve*: after layer i's apply sweep is dispatched the pipeline calls
+back (``RSQPipeline.layer_commit``) with everything needed to continue the
+stack from layer i+1, and the runner persists it through the crash-safe
+``CheckpointManager``:
+
+  * the solved (quantized) block params of every layer so far,
+  * the propagated activations (= layer i+1's calibration inputs),
+  * the packed-artifact entries folded so far (plus their metadata, which
+    also carries the artifact's entry *order* — npz member order matters
+    for the byte-identical-artifact contract),
+  * under the overlapped schedule, layer i+1's already-complete Hessian
+    accumulators (so the resume skips that capture sweep entirely),
+  * the ``CalibrationLoader`` state (seed, step), reseeked on restore.
+
+On restart the runner restores the latest checkpoint, validates/reseeks the
+loader, and re-enters ``RSQPipeline.run(resume=...)``: solved layers are
+skipped, the stack continues from the restored activations, and the final
+packed artifact is **bit-identical** to an uninterrupted run — the parity
+tests in ``tests/test_resume.py`` compare file SHA-256s under both
+schedulers, with and without a device mesh.
+
+Failure handling reuses the shared :class:`repro.runtime.fault.RetryPolicy`
+(recoverable exception tuple, bounded restarts, exponential backoff) and
+reports structured events through :class:`repro.runtime.fault.EventLog`.
+Failures are injected at stage granularity via
+:class:`repro.runtime.fault.FaultPlan` — any ``(layer, stage)`` with
+``stage in {"capture", "solve", "apply", "pack"}``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+from repro.checkpoint import CheckpointManager
+from repro.core.pipeline import RSQPipeline
+from repro.runtime.fault import EventLog, RetryPolicy
+
+
+class QuantizeRunner:
+    """Drive ``RSQPipeline.run`` with layer-solve-granular checkpointing.
+
+    Parameters
+    ----------
+    pipeline : RSQPipeline
+    ckpt : CheckpointManager
+        Progress directory (distinct from the packed-artifact directory).
+    save_every_layers : int
+        Checkpoint cadence; the stack-completing commit always saves
+        (blocking) regardless.
+    policy : RetryPolicy
+        Recoverable-exception tuple + bounded restarts + backoff for the
+        in-process retry loop.  Out-of-process recovery (a new process
+        pointing at the same progress dir) goes through the same restore
+        path without the loop.
+    save_hessians : bool
+        Also persist the next layer's complete accumulators when the
+        schedule provides them (overlapped), skipping that capture sweep on
+        resume.  Values are exact float32 partial sums, so this is a pure
+        wall-clock trade — parity is unaffected either way.
+    loader : CalibrationLoader, optional
+        Recorded via ``state()`` at every save and ``restore()``d (seed
+        validation + reseek) before a resumed run.
+    resume : bool
+        ``False`` ignores any existing checkpoints (clean-run semantics);
+        in-process retries then also restart from scratch, which still
+        terminates because a ``FaultPlan`` decrements its counters.
+
+    After ``run``: ``restarts``, ``events`` (structured ``checkpoint`` /
+    ``restart`` / ``resume`` records) and ``ckpt_overhead_s`` (total time
+    spent in commit bookkeeping + checkpoint saves — the bench field).
+    """
+
+    def __init__(self, pipeline: RSQPipeline, ckpt: CheckpointManager, *,
+                 save_every_layers: int = 1,
+                 policy: Optional[RetryPolicy] = None,
+                 save_hessians: bool = True,
+                 loader: Any = None,
+                 resume: bool = True,
+                 on_event=None, verbose: bool = False):
+        self.pipeline = pipeline
+        self.ckpt = ckpt
+        self.save_every_layers = max(int(save_every_layers), 1)
+        self.policy = policy or RetryPolicy()
+        self.save_hessians = save_hessians
+        self.loader = loader
+        self.resume = resume
+        self.events = EventLog(on_event, verbose=verbose)
+        self.restarts = 0
+        self.ckpt_overhead_s = 0.0
+        self._solved: dict[str, Any] = {}
+        self._reports: dict[str, dict] = {}
+        self._last_saved = 0
+
+    # ------------------------------------------------------------ commit hook
+    def _commit(self, *, index: int, state: dict, p_new, acts,
+                art_entries: dict, art_meta: dict,
+                next_hessians: Optional[dict], next_index: Optional[int],
+                last: bool) -> None:
+        """``RSQPipeline.layer_commit`` callback: record layer ``index`` as
+        solved and checkpoint on cadence (always on the final layer)."""
+        t0 = time.perf_counter()
+        self._solved[str(index)] = p_new
+        self.pipeline.layer_sync(state)  # floats for the JSON report
+        self._reports[f"layer{index}"] = {
+            "weights": dict(state["pending"]),
+            "seconds": round(time.perf_counter() - state["t0"], 4)}
+        if last or index + 1 - self._last_saved >= self.save_every_layers:
+            ckpt_state: dict[str, Any] = {
+                "solved": dict(self._solved),
+                "acts": list(acts),
+                "art": {n: dict(e) for n, e in art_entries.items()},
+            }
+            extra = {
+                "next": index + 1,
+                "complete": bool(last),
+                "reports": dict(self._reports),
+                "art_meta": {n: dict(m) for n, m in art_meta.items()},
+                "loader": (self.loader.state()
+                           if self.loader is not None else None),
+                "hess_layer": None,
+            }
+            if self.save_hessians and next_hessians is not None and not last:
+                ckpt_state["hessians"] = {str(next_index): dict(next_hessians)}
+                extra["hess_layer"] = int(next_index)
+            self.ckpt.save(index + 1, ckpt_state, extra=extra, blocking=last)
+            self._last_saved = index + 1
+            self.events.emit("checkpoint", layer=index, next=index + 1,
+                             complete=bool(last),
+                             entries=len(art_entries))
+        self.ckpt_overhead_s += time.perf_counter() - t0
+
+    # --------------------------------------------------------------- restore
+    def _load_resume(self) -> Optional[dict]:
+        """Latest checkpoint -> ``RSQPipeline.run(resume=...)`` dict (None
+        when there is none).  Also reseeks/validates the loader."""
+        self.ckpt.wait()
+        if self.ckpt.latest_step() is None:
+            return None
+        step, state, extra = self.ckpt.restore()
+        resume = {
+            "start": int(extra["next"]),
+            "solved": state.get("solved", {}),
+            "acts": list(state.get("acts", [])),
+            "art": state.get("art", {}),
+            "art_meta": extra.get("art_meta") or {},
+            "reports": extra.get("reports") or {},
+        }
+        hl = extra.get("hess_layer")
+        if hl is not None and "hessians" in state:
+            resume["hessians"] = {int(hl): state["hessians"][str(hl)]}
+        if self.loader is not None and extra.get("loader") is not None:
+            self.loader.restore(extra["loader"])
+        # seed the in-memory mirrors so the next save carries the full prefix
+        self._solved = dict(resume["solved"])
+        self._reports = dict(resume["reports"])
+        self._last_saved = int(step)
+        self.events.emit("resume", step=int(step), start=resume["start"],
+                         complete=bool(extra.get("complete")))
+        return resume
+
+    # -------------------------------------------------------------------- run
+    def run(self, params: dict, calib_tokens, *, fault=None, **kw):
+        """Run the pipeline to completion, surviving recoverable failures.
+
+        Any exception matching ``policy.recoverable`` triggers: structured
+        ``restart`` event, exponential backoff, restore of the latest
+        layer-solve checkpoint, and re-entry mid-stack.  Everything else
+        propagates.  Returns ``(new_params, report)`` exactly like
+        ``RSQPipeline.run``."""
+        while True:
+            self._solved, self._reports, self._last_saved = {}, {}, 0
+            resume = self._load_resume() if self.resume else None
+            try:
+                return self.pipeline.run(
+                    params, calib_tokens, fault=fault,
+                    commit=self._commit, resume=resume, **kw)
+            except Exception as e:
+                # drain any in-flight async save first: an exception unwind
+                # is an orderly death (unlike SIGKILL), so progress already
+                # handed to the checkpointer must land before we re-raise —
+                # the next process resumes from it deterministically
+                try:
+                    self.ckpt.wait()
+                except Exception:
+                    pass  # already raising; a failed save just means an
+                    # older checkpoint (or none) greets the next attempt
+                if not self.policy.is_recoverable(e):
+                    raise
+                self.restarts += 1
+                if self.restarts > self.policy.max_restarts:
+                    raise
+                b = self.policy.backoff(self.restarts)
+                self.events.emit("restart", error=repr(e),
+                                 attempt=self.restarts,
+                                 backoff_s=round(b, 4))
+                if b:
+                    time.sleep(b)

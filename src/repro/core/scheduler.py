@@ -41,6 +41,27 @@ constraint), so it is scheduler-neutral: the overlapped timeline keeps its
 single end-of-stack drain.  The legacy ``pack_writeback="host"`` baseline
 host-gathers inside the solve stage — one more reason it is retired to a
 parity-test role.
+
+Fault tolerance hooks
+---------------------
+Both schedulers thread two extra engine hooks through the stack:
+
+``engine.stage_point(index, stage, batch=None)``
+    Called right before each stage's device work is dispatched —
+    per batch for ``capture``/``apply``, once per layer for ``solve``
+    (the pipeline itself raises the ``pack`` point inside its packed
+    write-back).  This is where a ``runtime.fault.FaultPlan`` injects
+    failures at any ``(layer, stage)`` of the stack, so the recovery
+    path (``core.resume.QuantizeRunner``) is testable at every dispatch
+    boundary of either schedule.
+
+``engine.layer_commit(task, state, p_new, acts, next_state=)``
+    Called once per layer after its apply sweep has been dispatched:
+    ``acts`` are the layer's propagated outputs (= the next layer's
+    inputs) and, under the overlapped schedule, ``next_state`` already
+    carries the next layer's fully-accumulated Hessians.  A
+    ``QuantizeRunner`` checkpoints pipeline progress here; without a
+    runner the hook is a no-op, so neither schedule pays anything.
 """
 from __future__ import annotations
 
@@ -85,16 +106,22 @@ class SequentialScheduler(LayerScheduler):
         for task in tasks:
             st = engine.layer_begin(task, acts)
             for bi, x_b in enumerate(acts):
+                engine.stage_point(task.index, "capture", bi)
                 engine.layer_capture(st, bi, x_b)
+            engine.stage_point(task.index, "solve")
             p_new = engine.layer_solve(st)
             # classic lock-step semantics: the per-weight error report is
             # materialized (host sync) before any propagation is dispatched,
             # and every layer propagates (even a dead final sweep) —
             # exactly the pre-scheduler pipeline's dispatch stream
             engine.layer_sync(st)
-            acts = [engine.layer_apply(st, p_new, bi, x_b)
-                    for bi, x_b in enumerate(acts)]
+            buf = []
+            for bi, x_b in enumerate(acts):
+                engine.stage_point(task.index, "apply", bi)
+                buf.append(engine.layer_apply(st, p_new, bi, x_b))
+            acts = buf
             outs.append((p_new, engine.layer_finalize(st)))
+            engine.layer_commit(task, st, p_new, acts)
         return acts, outs
 
 
@@ -132,22 +159,31 @@ class OverlappedScheduler(LayerScheduler):
         pending = []  # (state, p_new) awaiting the drain
         st = engine.layer_begin(tasks[0], acts)
         for bi, x_b in enumerate(acts):
+            engine.stage_point(tasks[0].index, "capture", bi)
             engine.layer_capture(st, bi, x_b)
         for i in range(len(tasks)):
+            engine.stage_point(tasks[i].index, "solve")
             p_new = engine.layer_solve(st)  # dispatched, not synced
             last = i + 1 >= len(tasks)
             st_next = None if last else engine.layer_begin(tasks[i + 1], acts)
             if not (last and not propagate_last and self.skip_dead_apply):
                 buf = []  # double buffer: fills while `acts` is still read
                 for bi, x_b in enumerate(acts):
+                    engine.stage_point(tasks[i].index, "apply", bi)
                     y_b = engine.layer_apply(st, p_new, bi, x_b)
                     if st_next is not None:
+                        engine.stage_point(tasks[i + 1].index, "capture", bi)
                         engine.layer_capture(st_next, bi, y_b)
                     buf.append(y_b)
                 acts = buf
             # else: minimal dispatch — the caller marked the final apply
             # sweep dead, so it is never enqueued
             pending.append((st, p_new))
+            # commit AFTER the interleaved capture sweep: under this
+            # schedule the next layer's Hessians are complete here, so a
+            # checkpointing runner can persist them alongside the acts
+            engine.layer_commit(tasks[i], st, p_new, acts,
+                                next_state=st_next)
             st = st_next
         # drain: every layer's device work is enqueued; materialize reports
         outs = [(p_new, engine.layer_finalize(st_)) for st_, p_new in pending]

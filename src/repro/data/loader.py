@@ -104,11 +104,25 @@ class CalibrationLoader:
 
     # ------------------------------------------------------------- seekable
     def state(self) -> dict:
-        return {"step": self.step, "seed": self.seed}
+        """Everything needed to reseek *and* to catch a mis-configured
+        restart: a checkpoint taken with one calibration geometry must not
+        silently resume under another (the Hessian partial sums would mix
+        token sets)."""
+        return {"step": self.step, "seed": self.seed,
+                "n_samples": self.n_samples, "seq_len": self.seq_len,
+                "batch_size": self.batch_size}
 
     def restore(self, state: dict) -> None:
-        assert int(state.get("seed", self.seed)) == self.seed, \
-            "restoring a different seed's loader state"
+        for field, mine in (("seed", self.seed),
+                            ("n_samples", self.n_samples),
+                            ("seq_len", self.seq_len),
+                            ("batch_size", self.batch_size)):
+            theirs = state.get(field)
+            if theirs is not None and int(theirs) != mine:
+                raise ValueError(
+                    f"loader state mismatch: checkpoint has {field}="
+                    f"{theirs}, this loader has {mine} — resuming would "
+                    f"feed a different calibration stream")
         self.step = int(state["step"])
 
     # ------------------------------------------------------------- assembly

@@ -13,6 +13,27 @@ disjoint per-data-group shards assembled into a globally-sharded array
 sharded Hessian accumulators on; ``--pack-out DIR`` writes the packed
 serving artifact (codes packed on device, sharded write-back) that
 ``launch.serve --packed DIR`` loads without unpacking on host.
+
+Fault tolerance (resume / verify workflow)
+------------------------------------------
+``--save-every-layers N`` runs the pipeline under a
+``core.resume.QuantizeRunner``: progress is checkpointed at layer-solve
+granularity (solved params, propagated activations, packed entries,
+loader state) into ``--progress-dir`` (default ``<pack-out>.progress``).
+A killed job restarts with the *same* command plus ``--resume``: the
+runner restores the latest layer checkpoint, reseeks the calibration
+loader, skips the solved prefix and continues mid-stack — the final
+packed artifact is byte-identical to a run that never died (pinned by
+tests/test_resume.py).  ``--fail-at LAYER:STAGE[:COUNT]`` (repeatable,
+``STAGE in {capture, solve, apply, pack}``) injects failures at stage
+dispatch points to exercise the recovery path; ``--max-restarts`` bounds
+the in-process retry loop (exponential backoff between attempts).
+
+The packed artifact itself is durable: every file is written to a temp
+path and atomically renamed, and ``meta.json`` records per-file SHA-256
+checksums (format v3) that ``launch.serve --packed`` re-verifies at load
+(``--no-verify`` opts out; corrupt files fail with
+``checkpoint.ArtifactCorruptError``).
 """
 from __future__ import annotations
 
@@ -80,6 +101,28 @@ def main(argv=None) -> dict:
                     "— no host copy of any unsharded (q, scales) tensor) "
                     "plus the fp residual tree; load with launch.serve "
                     "--packed DIR or checkpoint.packed.load_packed_params")
+    ap.add_argument("--save-every-layers", type=int, default=0, metavar="N",
+                    help="checkpoint quantization progress every N layer "
+                    "solves into --progress-dir (0: no progress "
+                    "checkpointing).  A killed run restarts with --resume "
+                    "and continues mid-stack, byte-identical to an "
+                    "uninterrupted run")
+    ap.add_argument("--progress-dir", default=None, metavar="DIR",
+                    help="progress-checkpoint directory (default: "
+                    "<pack-out>.progress, or ./quantize_progress without "
+                    "--pack-out)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest progress checkpoint in "
+                    "--progress-dir (without this flag an existing progress "
+                    "dir is an error, not a silent restart)")
+    ap.add_argument("--fail-at", action="append", default=[],
+                    metavar="LAYER:STAGE[:COUNT]",
+                    help="inject a failure at a stage dispatch point "
+                    "(stage: capture|solve|apply|pack); repeatable — "
+                    "exercises the recovery path end to end")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="bound on in-process recovery restarts "
+                    "(exponential backoff between attempts)")
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--n-calib", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=128)
@@ -99,14 +142,16 @@ def main(argv=None) -> dict:
 
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
     ctx = LOCAL
+    loader = None
     if args.shard_calib:
         n_dev = jax.device_count()
         if n_dev > 1:
             mesh = jax.make_mesh((n_dev,), ("data",))
             ctx = ParallelCtx(mesh=mesh, dp=("data",))
-        calib = CalibrationLoader(corpus, args.n_calib, args.calib_seq,
-                                  ctx=ctx, batch_size=args.batch,
-                                  seed=args.seed).dataset()
+        loader = CalibrationLoader(corpus, args.n_calib, args.calib_seq,
+                                   ctx=ctx, batch_size=args.batch,
+                                   seed=args.seed)
+        calib = loader.dataset()
     else:
         calib = calibration_set(cfg.vocab_size, args.n_calib, args.calib_seq,
                                 seed=args.seed, corpus=corpus)
@@ -134,8 +179,31 @@ def main(argv=None) -> dict:
                     pack_output=args.pack_out is not None)
     base_ppl = eval_ppl(model, params, heldout, args.batch)
     pipe = RSQPipeline(model, rsq, ctx=ctx)
-    qparams, report = pipe.run(params, calib, batch_size=args.batch,
-                               verbose=True)
+    use_runner = (args.resume or args.save_every_layers > 0
+                  or args.progress_dir is not None or bool(args.fail_at))
+    runner = None
+    if use_runner:
+        from repro.core.resume import QuantizeRunner
+        from repro.runtime.fault import FaultPlan, RetryPolicy
+
+        progress = args.progress_dir or (
+            args.pack_out + ".progress" if args.pack_out
+            else "quantize_progress")
+        ckpt = CheckpointManager(progress)
+        if ckpt.latest_step() is not None and not args.resume:
+            ap.error(f"progress dir {progress!r} holds checkpoints from a "
+                     f"previous run; pass --resume to continue it, or "
+                     f"remove the directory to start over")
+        fault = FaultPlan.parse(args.fail_at) if args.fail_at else None
+        runner = QuantizeRunner(
+            pipe, ckpt, save_every_layers=max(args.save_every_layers, 1),
+            policy=RetryPolicy(max_restarts=args.max_restarts),
+            loader=loader, resume=args.resume, verbose=True)
+        qparams, report = runner.run(params, calib, fault=fault,
+                                     batch_size=args.batch, verbose=True)
+    else:
+        qparams, report = pipe.run(params, calib, batch_size=args.batch,
+                                   verbose=True)
     q_ppl = eval_ppl(model, qparams, heldout, args.batch)
     summary = {
         "arch": args.arch, "rsq": dataclasses.asdict(rsq),
@@ -143,6 +211,12 @@ def main(argv=None) -> dict:
         "ppl_ratio": q_ppl / base_ppl,
         "n_weights": sum(len(l["weights"]) for l in report["layers"].values()),
     }
+    if runner is not None:
+        summary["fault_tolerance"] = {
+            "restarts": runner.restarts,
+            "ckpt_overhead_s": round(runner.ckpt_overhead_s, 4),
+            "events": [e["kind"] for e in runner.events],
+        }
     if args.pack_out:
         save_packed_artifact(args.pack_out, pipe.artifact, params=qparams,
                              extra={"arch": args.arch,

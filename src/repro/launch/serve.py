@@ -222,6 +222,11 @@ def main(argv=None):
                     "every dense projection through quant_matmul (default); "
                     "--no-keep-packed dequantizes whole weights on device "
                     "at load time instead")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="with --packed: skip the SHA-256 artifact "
+                    "integrity check at load time (format v3 artifacts "
+                    "record per-file checksums; a corrupt file otherwise "
+                    "fails with ArtifactCorruptError before serving)")
     ap.add_argument("--kernel-check", action="store_true",
                     help="deprecated: keep-packed serving (the default) "
                     "already runs every projection through quant_matmul "
@@ -246,7 +251,7 @@ def main(argv=None):
 
         loader = (load_packed_forward_params if args.keep_packed
                   else load_packed_params)
-        params, meta = loader(args.packed)
+        params, meta = loader(args.packed, verify=not args.no_verify)
         arch = meta.get("extra", {}).get("arch")
         assert arch in (None, args.arch), \
             f"artifact was quantized for --arch {arch}, serving {args.arch}"

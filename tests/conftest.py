@@ -1,9 +1,22 @@
 import dataclasses
+import warnings
 
 import jax
 import pytest
 
 from repro.configs import get_config
+
+
+def pytest_configure(config):
+    # XLA:CPU cannot donate buffers across executions, so every
+    # donate_argnums jit (fused calibration step, scan decode) emits
+    # "Some donated buffers were not usable" on CPU test runs.  Donation
+    # is a no-op there, not a bug — silence the known-harmless noise.
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
+    config.addinivalue_line(
+        "filterwarnings",
+        "ignore:Some donated buffers were not usable")
 
 
 @pytest.fixture(scope="session")

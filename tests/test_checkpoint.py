@@ -35,6 +35,30 @@ def test_atomicity_no_partial_dirs(tmp_path, state):
     cm = CheckpointManager(tmp_path, keep=3)
     cm.save(5, state, blocking=True)
     assert not list(tmp_path.glob("tmp.*"))
+    # the completed step carries the terminal marker and no .tmp leftovers
+    d = tmp_path / "step_0000000005"
+    assert (d / "DONE").exists()
+    assert not list(d.glob("*.tmp*"))
+
+
+def test_half_written_step_is_ignored(tmp_path, state):
+    """A step dir without the terminal DONE marker (crash mid-save, e.g. a
+    non-atomic rename or a partial copy) is invisible to latest_step() and
+    refused by restore() — recovery falls back to the previous step."""
+    cm = CheckpointManager(tmp_path, keep=5)
+    cm.save(1, state, blocking=True)
+    cm.save(2, state, blocking=True)
+    (tmp_path / "step_0000000002" / "DONE").unlink()  # simulate the crash
+    assert cm.all_steps() == [1]
+    assert cm.latest_step() == 1
+    step, _, _ = cm.restore()
+    assert step == 1
+    with pytest.raises(FileNotFoundError, match="half-written"):
+        cm.restore(2)
+    # with no completed step at all, restore reports no checkpoints
+    (tmp_path / "step_0000000001" / "DONE").unlink()
+    with pytest.raises(FileNotFoundError):
+        cm.restore()
 
 
 def test_restore_specific_step(tmp_path, state):

@@ -1,6 +1,8 @@
-"""Fault tolerance: failure-injected training resumes exactly."""
+"""Fault tolerance: failure-injected training resumes exactly, retry
+policy semantics, fault-plan parsing, structured runner events."""
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.data.loader import DataLoader
@@ -8,10 +10,11 @@ from repro.data.synthetic import SyntheticCorpus
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim import make_optimizer
-from repro.runtime.fault import StepRunner
+from repro.runtime.fault import (FaultPlan, InjectedFailure, RetryPolicy,
+                                 StepRunner)
 
 
-def _run(tmp_path, tiny_cfg, fail_at, tag):
+def _run(tmp_path, tiny_cfg, fail_at, tag, **kw):
     model = build_model(tiny_cfg)
     params = jax.jit(model.init)(jax.random.key(0))
     opt = make_optimizer("adamw", 1e-3)
@@ -19,7 +22,7 @@ def _run(tmp_path, tiny_cfg, fail_at, tag):
     loader = DataLoader(SyntheticCorpus(tiny_cfg.vocab_size, seed=0), 4, 32)
     ckpt = CheckpointManager(tmp_path / tag, keep=2)
     step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
-    runner = StepRunner(step_fn, ckpt, save_every=5)
+    runner = StepRunner(step_fn, ckpt, save_every=5, **kw)
     return runner.run(params, opt_state, loader, 16, fail_at=fail_at,
                       log_every=1000)
 
@@ -32,3 +35,66 @@ def test_failure_injection_resumes_exactly(tmp_path, tiny_cfg):
     for a, b in zip(jax.tree.leaves(clean["params"]),
                     jax.tree.leaves(faulty["params"])):
         assert bool(jnp.all(a == b))
+    # the restart surfaced as a structured event, not just a counter
+    restarts = [e for e in faulty["events"] if e["kind"] == "restart"]
+    assert len(restarts) == 1
+    assert restarts[0]["step"] == 12 and restarts[0]["attempt"] == 1
+
+
+def test_non_recoverable_exception_propagates(tmp_path, tiny_cfg):
+    """An exception type outside the configured recoverable tuple is never
+    retried, even with restarts left."""
+    with pytest.raises(InjectedFailure):
+        _run(tmp_path, tiny_cfg, {3: 1}, "strict",
+             recoverable=(ValueError,), max_restarts=5)
+
+
+def test_backoff_between_restarts(tmp_path, tiny_cfg):
+    """backoff_s paces restarts exponentially and lands in the event."""
+    import time
+
+    t0 = time.time()
+    out = _run(tmp_path, tiny_cfg, {3: 2}, "backoff", backoff_s=0.1)
+    assert out["restarts"] == 2
+    # restart 1 sleeps 0.1s, restart 2 sleeps 0.2s
+    assert time.time() - t0 >= 0.3
+    backs = [e["backoff_s"] for e in out["events"]
+             if e["kind"] == "restart"]
+    assert backs == [pytest.approx(0.1), pytest.approx(0.2)]
+
+
+def test_straggler_watchdog_emits_structured_event(tmp_path, tiny_cfg):
+    """factor 0 flags every post-warmup step: the watchdog's event carries
+    the step and timing payload (a metrics hook on a real pod)."""
+    out = _run(tmp_path, tiny_cfg, None, "straggler", straggler_factor=0.0)
+    stragglers = [e for e in out["events"] if e["kind"] == "straggler"]
+    assert stragglers
+    for e in stragglers:
+        assert {"step", "seconds", "median_s", "factor"} <= set(e)
+
+
+def test_retry_policy_backoff_curve():
+    p = RetryPolicy(backoff_s=0.5, backoff_factor=2.0, max_backoff_s=3.0)
+    assert [p.backoff(n) for n in (1, 2, 3, 4, 5)] == [0.5, 1.0, 2.0, 3.0, 3.0]
+    assert RetryPolicy(backoff_s=0.0).backoff(4) == 0.0
+    assert p.is_recoverable(InjectedFailure("x"))
+    assert not p.is_recoverable(ValueError("x"))
+
+
+def test_fault_plan_parse_and_check():
+    plan = FaultPlan.parse(["3:solve", "0:capture:2"])
+    assert plan.fail_at == {(3, "solve"): 1, (0, "capture"): 2}
+    for _ in range(2):
+        with pytest.raises(InjectedFailure):
+            plan.check(0, "capture", batch=0)
+    plan.check(0, "capture", batch=0)  # count exhausted: no longer armed
+    assert [f["layer"] for f in plan.fired] == [0, 0]
+    # batch-specific keys outrank the layer-wide key
+    plan2 = FaultPlan({(1, "apply", 2): 1})
+    plan2.check(1, "apply", batch=0)
+    with pytest.raises(InjectedFailure):
+        plan2.check(1, "apply", batch=2)
+    with pytest.raises(ValueError, match="unknown stage"):
+        FaultPlan({(0, "bogus"): 1})
+    with pytest.raises(ValueError, match="LAYER:STAGE"):
+        FaultPlan.parse(["nope"])
