@@ -85,7 +85,9 @@ def check_serve_ratio(fresh: dict) -> list[str]:
     the uncontended quantity on both sides; structural slowdowns hit
     every rep including the best); pre-PR-5 results only carry the
     throughput fields, whose ratio is gated the same way (PR-4's
-    packed-slower-than-fp decode fails)."""
+    packed-slower-than-fp decode fails).  The ``long_context`` leg's
+    quantized-KV ``decode_vs_fp_ratio`` fields (PR 7) are gated at the
+    same tolerance when present."""
     try:
         ratio = fresh["packed"].get("decode_vs_fp_ratio")
         if ratio is None:
@@ -95,11 +97,28 @@ def check_serve_ratio(fresh: dict) -> list[str]:
     except (KeyError, TypeError, ValueError, ZeroDivisionError):
         return ["BENCH_serve.json: decode ratio fields missing — cannot "
                 "gate the packed/fp decode ratio"]
+    bad = []
     if ratio > SERVE_RATIO_TOL:
-        return [f"BENCH_serve.json: packed decode is {ratio:.2f}x slower "
-                f"than fp (tolerance {SERVE_RATIO_TOL:.2f}x): the packed "
-                "serving path must not lose decode to the dequantized one"]
-    return []
+        bad.append(
+            f"BENCH_serve.json: packed decode is {ratio:.2f}x slower "
+            f"than fp (tolerance {SERVE_RATIO_TOL:.2f}x): the packed "
+            "serving path must not lose decode to the dequantized one")
+    # quantized-KV long-context decode gate (PR 7), same logic: the int8 /
+    # 2-bit cache exists to cut per-token cache traffic, so its decode may
+    # not fall below fp decode beyond the tolerance at the longest length
+    for name, leg in (fresh.get("long_context") or {}).items():
+        if not isinstance(leg, dict):
+            continue
+        for s, leaf in leg.items():
+            r = (leaf or {}).get("decode_vs_fp_ratio") if isinstance(
+                leaf, dict) else None
+            if r is not None and float(r) > SERVE_RATIO_TOL:
+                bad.append(
+                    f"BENCH_serve.json: long-context {name} decode at "
+                    f"S={s} is {float(r):.2f}x slower than fp (tolerance "
+                    f"{SERVE_RATIO_TOL:.2f}x): the quantized KV cache "
+                    "must not lose decode to the fp cache")
+    return bad
 
 
 def check_regressions(baselines: dict[str, dict],

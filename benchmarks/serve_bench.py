@@ -37,6 +37,14 @@ tolerance) is a regression of the refactor's whole point, not machine
 noise — advisory by construction (the CI bench-guard job is
 non-blocking).
 
+A **long-context leg** (PR 7) varies the KV-cache codec instead of the
+weight representation: decode tok/s vs cached length (512, 2048 rows) for
+the fp, int8 and 2-bit-log caches on one shared param tree, plus the
+allocated ``kv_cache_resident_bytes`` and ``kv_bytes_ratio_vs_bf16``
+(~ bits/16 plus scale rows).  ``run.py`` gates the quantized-vs-fp decode
+ratio at the longest length with the same ``SERVE_RATIO_TOL`` — a
+quantized cache that decodes slower than fp defeats its purpose.
+
 With >= 8 devices (CI's fake-8-device matrix entry) an extra **mesh leg**
 runs: a kernel-aligned model (every quantized d_out a multiple of
 128 x model-axis) is calibrated under a (2 data x 4 model) mesh, served
@@ -80,6 +88,12 @@ BITS = 4
 # kernel to run
 MESH_D_MODEL, MESH_LAYERS, MESH_BATCH, MESH_PROMPT, MESH_GEN = 512, 2, 2, 16, 8
 MESH_REPS = 3
+
+# long-context leg (PR 7): decode tok/s vs cached length for the fp, int8
+# and 2-bit-log KV caches, same weights throughout — the cache codec is
+# the only variable.  Lengths are allocated cache rows (prompt = S - GEN).
+LC_BATCH, LC_GEN, LC_REPS = 4, 32, 3
+LC_LENGTHS = (512, 2048)
 
 
 def _quantize_to_artifact(cfg, ctx=None, calib_rows=16, calib_len=64,
@@ -197,6 +211,82 @@ class _ServeTimer:
             "decode_tok_s_python": round(b * GEN / py_s, 1),
             "steady_total_s": round(p_s + d_s, 4),
         }
+
+
+def _long_context_leg() -> dict:
+    """Decode throughput vs cached length for fp / int8 / 2-bit-log KV.
+
+    One tiny GQA model, one param tree (``kv_bits`` never touches the
+    weights); per cached length the three cache codecs run interleaved
+    reps of un-timed prefill + timed fused scan decode.  Alongside the
+    timings the leg records the allocated cache footprint
+    (``kv_cache_resident_bytes`` via ``eval_shape`` — nothing allocated)
+    and ``kv_bytes_ratio_vs_bf16``: quantized cache bytes over the same
+    cache held in bf16, ~ bits/16 plus the scale rows.  ``run.py`` gates
+    ``decode_vs_fp_ratio`` at the longest length with SERVE_RATIO_TOL —
+    quantized-KV decode losing to fp decode defeats the codec's purpose
+    (less cache traffic per generated token), exactly the packed-weight
+    decode gate's logic."""
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticCorpus
+    from repro.launch.serve import (_prefill_fn, _scan_decode_fn,
+                                    kv_cache_resident_bytes)
+    from repro.models import build_model
+
+    base = dataclasses.replace(
+        get_config(ARCH).reduced(), dtype="float32",
+        n_layers=N_LAYERS, d_model=D_MODEL, vocab_size=512)
+    params = jax.jit(build_model(base).init)(jax.random.key(0))
+    corpus = SyntheticCorpus(vocab_size=base.vocab_size, seed=0)
+    key = jax.random.key(0)
+
+    variants = {"fp": 0, "kv8": 8, "kv2": 2}
+    out = {name: {} for name in variants}
+    for s in LC_LENGTHS:
+        t = s - LC_GEN
+        prompts = corpus.sample(jax.random.key(3), LC_BATCH, t)
+        legs = {}
+        for name, bits in variants.items():
+            model = build_model(dataclasses.replace(base, kv_bits=bits))
+            legs[name] = (model, _prefill_fn(model, s),
+                          _scan_decode_fn(model, LC_GEN, False))
+        times = {name: [] for name in variants}
+        for rep in range(LC_REPS + 1):  # rep 0 compiles, untimed
+            for name, (model, pre, dec) in legs.items():
+                logits, cache = pre(params, prompts, None, None)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                jax.block_until_ready(tok)
+                t0 = time.perf_counter()
+                toks = dec(params, cache, tok, jnp.int32(t), key,
+                           jnp.float32(0.0))
+                jax.block_until_ready(toks)
+                if rep:
+                    times[name].append(time.perf_counter() - t0)
+        for name, (model, _, _) in legs.items():
+            d_s = min(times[name])
+            cache_b = kv_cache_resident_bytes(
+                jax.eval_shape(lambda m=model: m.init_cache(LC_BATCH, s)))
+            out[name][str(s)] = {
+                "decode_s": round(d_s, 4),
+                "decode_tok_s": round(LC_BATCH * LC_GEN / d_s, 1),
+                "kv_cache_resident_bytes": int(cache_b),
+            }
+    s_max = str(max(LC_LENGTHS))
+    fp_leaf = out["fp"][s_max]
+    # this bench runs fp32; a bf16 cache holds the same rows at 2 bytes
+    bf16_bytes = fp_leaf["kv_cache_resident_bytes"] // 2
+    for name in ("kv8", "kv2"):
+        leaf = out[name][s_max]
+        leaf["decode_vs_fp_ratio"] = round(
+            leaf["decode_s"] / fp_leaf["decode_s"], 4)
+        leaf["kv_bytes_ratio_vs_bf16"] = round(
+            leaf["kv_cache_resident_bytes"] / bf16_bytes, 4)
+    return {
+        "arch": f"{ARCH}-smoke(d={D_MODEL},L={N_LAYERS})",
+        "batch": LC_BATCH, "gen": LC_GEN, "lengths": list(LC_LENGTHS),
+        "decode_loop": "scan",
+        **out,
+    }
 
 
 def _mesh_leg() -> dict | None:
@@ -336,6 +426,17 @@ def run(table: Table | None = None):
         "n_packed_entries": len(meta["entries"]),
         "backend": jax.default_backend(),
     }
+    lc = _long_context_leg()
+    payload["long_context"] = lc
+    s_max = str(max(LC_LENGTHS))
+    table.add("long_ctx_decode_fp", lc["fp"][s_max]["decode_s"] * 1e6,
+              f"S={s_max} decode_tok_s={lc['fp'][s_max]['decode_tok_s']}")
+    for name in ("kv8", "kv2"):
+        leaf = lc[name][s_max]
+        table.add(f"long_ctx_decode_{name}", leaf["decode_s"] * 1e6,
+                  f"S={s_max} decode_tok_s={leaf['decode_tok_s']} "
+                  f"vs_fp={leaf['decode_vs_fp_ratio']} "
+                  f"kv_bytes_vs_bf16={leaf['kv_bytes_ratio_vs_bf16']}")
     mesh = _mesh_leg()
     if mesh is not None:
         payload["packed_mesh"] = mesh

@@ -92,7 +92,11 @@ class ModelConfig:
     # --- serving-time quantization (RSQ output) ------------------------------
     quant_bits: int = 0  # 0 = no quantization
     quant_group: int = 128
-    kv_bits: int = 0  # 0 = kv cache in activation dtype; 8 = int8 + scales
+    kv_bits: int = 0  # 0 = kv cache in activation dtype; 8 = int8 codes +
+    #     per-(token, head) scales; 2 = packed log codes (LogQuant-style)
+    #     + per-(kv_chunk, head) scales — see kernels/flash_decode
+    kv_chunk: int = 64  # tokens per 2-bit KV scale group (and the cache-
+    #     length alignment unit for any quantized cache)
 
     # ------------------------------------------------------------------ dims
     @property

@@ -7,4 +7,5 @@ jit'd public wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle).
   gram         — weighted Hessian accumulation 2·XR²Xᵀ (the Scale step)
   quant_matmul — packed int4/int2/int8 dequant-matmul (quantized serving)
   attn_colsum  — streaming attention column sums (AttnCon importance)
+  flash_decode — split-KV decode attention on int8/2-bit quantized KV
 """

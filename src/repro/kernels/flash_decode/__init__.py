@@ -1,0 +1,12 @@
+from repro.kernels.flash_decode.ops import (  # noqa: F401
+    flash_decode,
+    mla_flash_decode,
+)
+from repro.kernels.flash_decode.kernel import (  # noqa: F401
+    flash_decode_pallas,
+    mla_flash_decode_pallas,
+)
+from repro.kernels.flash_decode.ref import (  # noqa: F401
+    flash_decode_ref,
+    mla_flash_decode_ref,
+)

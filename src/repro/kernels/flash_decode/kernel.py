@@ -1,0 +1,245 @@
+"""Quantized-KV flash decode: single-token attention against int8 / 2-bit
+log-quantized KV tiles, dequantized in-register.
+
+Long-context decode is bound by KV-cache HBM traffic: the whole cache is
+read once per generated token per layer.  Storing the cache as quant
+codes + scales cuts that traffic to ~bits/16 of a bf16 cache — but only
+if attention consumes the codes *directly*.  These kernels stream
+(s_blk, d) KV tiles into VMEM still packed, unpack + dequantize them on
+the VPU, and feed the MXU — the cache is never materialized in fp, and a
+running max/sum-shifted ``(m, l, acc)`` triple (flash-decode softmax)
+carries the result across tiles via output-ref accumulation over the
+"arbitrary" grid axis, the same pattern as ``quant_matmul``'s o_ref.
+
+Two kernels share the tile dequant + streaming update:
+
+  * :func:`flash_decode_pallas`     — GQA-aware: one grid step per
+    (batch, kv_head, kv_tile), the (G, Dh) query group contracted against
+    the *un-repeated* cache tile (head-repeating the cache is exactly the
+    memory blowup this path exists to avoid).
+  * :func:`mla_flash_decode_pallas` — MLA's absorbed decode is 1-kv-head
+    attention in latent space: scores are q_lat·c + q_rope·r over the
+    compressed cache, values are the latents themselves.  Taking the
+    c and r codes as separate operands avoids materializing a concat of
+    cache codes per step.
+
+Both return raw partials ``(acc, m, l)`` (acc unnormalized) so the same
+kernel serves the local path and the split-KV ``shard_map`` path (ops.py
+merges shard partials with one tiny collective and normalizes once).
+
+Quantized formats (produced by ``models.attention``):
+
+  * ``kv_bits=8`` — int8 codes, per-(token, head) bf16 scales
+    (``kv_quantize``; ``chunk=1`` here).
+  * ``kv_bits=2`` — LogQuant-style log-distributed codes
+    value = scale * [-1, -0.25, +0.25, +1][code], packed 16 codes per
+    uint32 along the feature axis, one bf16 scale per (chunk, head)
+    group of tokens (``kv_log_encode``; ``chunk=cfg.kv_chunk``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _dequant_kv(codes, scale, *, kv_bits: int, chunk: int, d: int):
+    """Dequantize one (rows, d) KV tile in-register.
+
+    ``codes``: (rows, d) int8 or (rows, ceil(d/16)) uint32 2-bit packed;
+    ``scale``: (rows // chunk,) or (rows // chunk, 1) bf16, broadcast to
+    per-row.  Shift/mask unpack on the VPU (same idiom as
+    ``quant_matmul._dequant_tile``), fp32 result."""
+    scale = scale.reshape(-1, 1).astype(jnp.float32)
+    if chunk > 1:
+        scale = jnp.repeat(scale, chunk, axis=0)
+    if kv_bits == 8:
+        # kv_quantize folds the /127 into the stored scale
+        return codes.astype(jnp.float32) * scale
+    shifts = (jnp.arange(16, dtype=jnp.uint32) * 2)[None, None, :]
+    c = ((codes[:, :, None] >> shifts) & jnp.uint32(3)).astype(jnp.int32)
+    c = c.reshape(codes.shape[0], -1)[:, :d]
+    # log levels scale*[-1, -0.25, +0.25, +1] for codes 0..3, branch-free
+    mag = jnp.where((c == 1) | (c == 2), 0.25, 1.0).astype(jnp.float32)
+    sgn = jnp.where(c >= 2, 1.0, -1.0).astype(jnp.float32)
+    return sgn * mag * scale
+
+
+def _tile_update(scores, v, valid, m_prev, l_prev, acc_prev):
+    """One tile's streaming-softmax update of the (m, l, acc) triple.
+
+    ``scores``: (rows_q, s_blk) raw (unmasked) scores; ``v``: (s_blk, dv)
+    dequantized values; ``valid``: (1, s_blk) position mask.  Shared
+    verbatim by the Pallas kernels and the grouped-einsum refs — the
+    bit-parity contract between them holds by construction."""
+    s = jnp.where(valid, scores, NEG_INF)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # In decode the masked region is the *tail* (pos < S), so without the
+    # explicit zero exp(NEG_INF - NEG_INF) = 1 garbage would survive — no
+    # later tile's alpha ever rescales the final tiles away.
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = alpha * acc_prev + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _fd_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, pos_ref,
+               acc_ref, m_ref, l_ref, *, kv_bits: int, chunk: int,
+               dh: int, dv: int, s_blk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh), scale pre-folded
+    k = _dequant_kv(kq_ref[0, :, 0], ks_ref[0, :, 0], kv_bits=kv_bits,
+                    chunk=chunk, d=dh)   # (s_blk, Dh)
+    v = _dequant_kv(vq_ref[0, :, 0], vs_ref[0, :, 0], kv_bits=kv_bits,
+                    chunk=chunk, d=dv)   # (s_blk, Dv)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, s_blk)
+    idx = (pl.program_id(2) * s_blk
+           + jax.lax.broadcasted_iota(jnp.int32, (1, s_blk), 1))
+    valid = idx <= pos_ref[0, 0]
+    m_new, l_new, acc_new = _tile_update(
+        scores, v, valid, m_ref[0, 0], l_ref[0, 0], acc_ref[0, 0])
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    acc_ref[0, 0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "s_blk", "interpret"))
+def flash_decode_pallas(q, kq, ks, vq, vs, pos, *, kv_bits: int, chunk: int,
+                        dh: int, dv: int, s_blk: int,
+                        interpret: bool = True):
+    """GQA flash decode over a quantized cache -> raw partials.
+
+    q: (B, KV, G, Dh) — query groups, attention scale already folded in;
+    kq/vq: (B, S, KV, Dh) int8 or (B, S, KV, ceil(D/16)) uint32;
+    ks/vs: (B, S // chunk, KV) bf16; pos: (1, 1) int32.
+    Returns f32 ``(acc, m, l)``: (B, KV, G, Dv) unnormalized accumulator
+    plus (B, KV, G, 1) running max / denominator."""
+    b, kv, g, _ = q.shape
+    s = kq.shape[1]
+    assert s % s_blk == 0 and s_blk % chunk == 0, (s, s_blk, chunk)
+    rows_c = s_blk // chunk
+    wk, wv = kq.shape[-1], vq.shape[-1]
+    kernel = functools.partial(_fd_kernel, kv_bits=kv_bits, chunk=chunk,
+                               dh=dh, dv=dv, s_blk=s_blk)
+    grid = (b, kv, s // s_blk)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, q.shape[-1]), lambda i, j, kk: (i, j, 0, 0)),
+            pl.BlockSpec((1, s_blk, 1, wk), lambda i, j, kk: (i, kk, j, 0)),
+            pl.BlockSpec((1, rows_c, 1), lambda i, j, kk: (i, kk, j)),
+            pl.BlockSpec((1, s_blk, 1, wv), lambda i, j, kk: (i, kk, j, 0)),
+            pl.BlockSpec((1, rows_c, 1), lambda i, j, kk: (i, kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dv), lambda i, j, kk: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, kk: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, kk: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, kq, ks, vq, vs, pos)
+    return acc, m, l
+
+
+def _mla_fd_kernel(ql_ref, qr_ref, cq_ref, cs_ref, rq_ref, rs_ref, pos_ref,
+                   acc_ref, m_ref, l_ref, *, kv_bits: int, chunk: int,
+                   dl: int, dr: int, s_blk: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)  # (H, dl), scale pre-folded
+    qr = qr_ref[0].astype(jnp.float32)  # (H, dr)
+    c = _dequant_kv(cq_ref[0], cs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                    d=dl)               # (s_blk, dl) — keys *and* values
+    r = _dequant_kv(rq_ref[0], rs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                    d=dr)               # (s_blk, dr)
+    scores = (jax.lax.dot_general(ql, c, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+              + jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32))
+    idx = (pl.program_id(1) * s_blk
+           + jax.lax.broadcasted_iota(jnp.int32, (1, s_blk), 1))
+    valid = idx <= pos_ref[0, 0]
+    m_new, l_new, acc_new = _tile_update(
+        scores, c, valid, m_ref[0], l_ref[0], acc_ref[0])
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "s_blk", "interpret"))
+def mla_flash_decode_pallas(ql, qr, cq, cs, rq, rs, pos, *, kv_bits: int,
+                            chunk: int, dl: int, dr: int, s_blk: int,
+                            interpret: bool = True):
+    """MLA (absorbed, latent-space) flash decode -> raw partials.
+
+    ql: (B, H, dl) latent queries, qr: (B, H, dr) rope queries — the
+    (dn + dr)^-0.5 attention scale already folded in; cq: (B, S, dl) int8
+    or (B, S, ceil(dl/16)) uint32 latent codes; cs: (B, S // chunk) bf16;
+    rq/rs likewise for the shared rope key.  Values are the latents
+    themselves (v = c).  Returns f32 ``(acc, m, l)``: (B, H, dl) + 2x
+    (B, H, 1)."""
+    b, h, _ = ql.shape
+    s = cq.shape[1]
+    assert s % s_blk == 0 and s_blk % chunk == 0, (s, s_blk, chunk)
+    rows_c = s_blk // chunk
+    kernel = functools.partial(_mla_fd_kernel, kv_bits=kv_bits, chunk=chunk,
+                               dl=dl, dr=dr, s_blk=s_blk)
+    grid = (b, s // s_blk)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, h, ql.shape[-1]), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, h, qr.shape[-1]), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, s_blk, cq.shape[-1]), lambda i, kk: (i, kk, 0)),
+            pl.BlockSpec((1, rows_c), lambda i, kk: (i, kk)),
+            pl.BlockSpec((1, s_blk, rq.shape[-1]), lambda i, kk: (i, kk, 0)),
+            pl.BlockSpec((1, rows_c), lambda i, kk: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, kk: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, dl), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, h, 1), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, h, 1), lambda i, kk: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dl), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ql, qr, cq, cs, rq, rs, pos)
+    return acc, m, l

@@ -1,0 +1,128 @@
+"""Grouped-einsum reference for quantized-KV flash decode.
+
+Bit-parity contract: mirrors the Pallas kernels tile for tile — the same
+``s_blk`` tiling, the same ``_dequant_kv`` / ``_tile_update`` helpers
+(imported from kernel.py), the same ``dot_general`` dimension numbers
+with fp32 accumulation — so kernel == ref holds *bitwise* on the same
+codes (pinned in tests/test_kv_cache.py).
+
+Also the serving fallback with the same footprint discipline as
+``quant_matmul.ref``: a ``lax.scan`` over KV tiles that dequantizes only
+the active (s_blk, d) tile in-register — the full cache is never
+materialized in fp here either (this replaces the per-step full-cache
+``kv_dequantize`` the old int8 path did), and the scan is plain jnp, so
+GSPMD partitions it like any einsum.  That makes it the route used under
+a mesh whenever the split-KV ``shard_map`` can't run (misaligned local
+tiles): an opaque Pallas custom call there would make GSPMD all-gather
+the cache — the quant_matmul fallback policy, applied to the cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import (NEG_INF, _dequant_kv,
+                                               _tile_update)
+
+
+def _pad_tiles(x, blk: int):
+    """Pad the sequence axis (1) up to a tile multiple — padded rows are
+    code/scale zeros and always position-masked."""
+    pad = (-x.shape[1]) % blk
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "s_blk"))
+def flash_decode_ref(q, kq, ks, vq, vs, pos, *, kv_bits: int, chunk: int,
+                     dh: int, dv: int, s_blk: int):
+    """GQA partials (acc, m, l) matching ``flash_decode_pallas`` bitwise.
+
+    Same signature/layouts as the kernel (pos may be any int shape); S is
+    padded up to an ``s_blk`` multiple when ragged (masking covers it)."""
+    b, kv, g, _ = q.shape
+    rows_c = s_blk // chunk
+    kq, vq = _pad_tiles(kq, s_blk), _pad_tiles(vq, s_blk)
+    ks, vs = _pad_tiles(ks, rows_c), _pad_tiles(vs, rows_c)
+    n_tiles = kq.shape[1] // s_blk
+    qf = q.astype(jnp.float32)
+    px = jnp.reshape(pos, (-1,))[0].astype(jnp.int32)
+
+    def one(kk, qh, kc, ksc, vc, vsc, m1, l1, acc1):
+        # identical per-(batch, kv_head) tile math to _fd_kernel
+        k = _dequant_kv(kc, ksc, kv_bits=kv_bits, chunk=chunk, d=dh)
+        v = _dequant_kv(vc, vsc, kv_bits=kv_bits, chunk=chunk, d=dv)
+        scores = jax.lax.dot_general(
+            qh, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        idx = kk * s_blk + jax.lax.broadcasted_iota(jnp.int32, (1, s_blk), 1)
+        return _tile_update(scores, v, idx <= px, m1, l1, acc1)
+
+    def step(carry, kk):
+        acc, m, l = carry
+        # slice the active tile *first*, then transpose the tiny tile to
+        # (B, KV, s_blk, ·) — never a full-cache copy
+        k_t = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(kq, kk * s_blk, s_blk, 1), 1, 2)
+        v_t = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(vq, kk * s_blk, s_blk, 1), 1, 2)
+        ks_t = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(ks, kk * rows_c, rows_c, 1), 1, 2)
+        vs_t = jnp.moveaxis(
+            jax.lax.dynamic_slice_in_dim(vs, kk * rows_c, rows_c, 1), 1, 2)
+        f = jax.vmap(jax.vmap(functools.partial(one, kk)))
+        m_new, l_new, acc_new = f(qf, k_t, ks_t, v_t, vs_t, m, l, acc)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, g, dv), jnp.float32)
+    m0 = jnp.full((b, kv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  jnp.arange(n_tiles))
+    return acc, m, l
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "s_blk"))
+def mla_flash_decode_ref(ql, qr, cq, cs, rq, rs, pos, *, kv_bits: int,
+                         chunk: int, dl: int, dr: int, s_blk: int):
+    """MLA partials (acc, m, l) matching ``mla_flash_decode_pallas``."""
+    b, h, _ = ql.shape
+    rows_c = s_blk // chunk
+    cq, rq = _pad_tiles(cq, s_blk), _pad_tiles(rq, s_blk)
+    cs, rs = _pad_tiles(cs, rows_c), _pad_tiles(rs, rows_c)
+    n_tiles = cq.shape[1] // s_blk
+    qlf, qrf = ql.astype(jnp.float32), qr.astype(jnp.float32)
+    px = jnp.reshape(pos, (-1,))[0].astype(jnp.int32)
+
+    def one(kk, qlh, qrh, cc, csc, rc, rsc, m1, l1, acc1):
+        c = _dequant_kv(cc, csc, kv_bits=kv_bits, chunk=chunk, d=dl)
+        r = _dequant_kv(rc, rsc, kv_bits=kv_bits, chunk=chunk, d=dr)
+        scores = (jax.lax.dot_general(qlh, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(qrh, r, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+        idx = kk * s_blk + jax.lax.broadcasted_iota(jnp.int32, (1, s_blk), 1)
+        return _tile_update(scores, c, idx <= px, m1, l1, acc1)
+
+    def step(carry, kk):
+        acc, m, l = carry
+        c_t = jax.lax.dynamic_slice_in_dim(cq, kk * s_blk, s_blk, 1)
+        r_t = jax.lax.dynamic_slice_in_dim(rq, kk * s_blk, s_blk, 1)
+        cs_t = jax.lax.dynamic_slice_in_dim(cs, kk * rows_c, rows_c, 1)
+        rs_t = jax.lax.dynamic_slice_in_dim(rs, kk * rows_c, rows_c, 1)
+        f = jax.vmap(functools.partial(one, kk))
+        m_new, l_new, acc_new = f(qlf, qrf, c_t, cs_t, r_t, rs_t, m, l, acc)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, dl), jnp.float32)
+    m0 = jnp.full((b, h, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n_tiles))
+    return acc, m, l

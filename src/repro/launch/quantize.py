@@ -123,6 +123,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-restarts", type=int, default=3,
                     help="bound on in-process recovery restarts "
                     "(exponential backoff between attempts)")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="serving KV-cache precision recorded in the model "
+                    "config and the packed artifact's metadata: 0 = fp "
+                    "cache, 8 = int8 + per-token scales, 2 = packed log "
+                    "codes + per-chunk scales (weight quantization itself "
+                    "is unaffected; launch.serve --kv-bits applies it at "
+                    "serving time)")
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--n-calib", type=int, default=32)
     ap.add_argument("--calib-seq", type=int, default=128)
@@ -133,6 +140,13 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
+    if args.kv_bits is not None:
+        if args.kv_bits not in (0, 2, 8):
+            ap.error(f"--kv-bits {args.kv_bits} is not supported — use 0 "
+                     "(KV cache in the activation dtype), 8 (int8 + "
+                     "per-token scales) or 2 (packed log codes + "
+                     "per-chunk scales)")
+        cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
     model = build_model(cfg)
     if args.ckpt:
         _, state, _ = CheckpointManager(args.ckpt).restore()
@@ -220,7 +234,8 @@ def main(argv=None) -> dict:
     if args.pack_out:
         save_packed_artifact(args.pack_out, pipe.artifact, params=qparams,
                              extra={"arch": args.arch,
-                                    "rsq": dataclasses.asdict(rsq)})
+                                    "rsq": dataclasses.asdict(rsq),
+                                    "kv_bits": cfg.kv_bits})
         summary["pack_out"] = args.pack_out
     print(json.dumps(summary, indent=2))
     if args.out:

@@ -39,6 +39,20 @@ Serving performance
   on the model axis and ``quant_matmul`` runs the kernel per shard under
   ``shard_map`` — no code all-gather, no ref-GEMM fallback; ragged local
   tiles and expert stacks under vmap fall back to the GSPMD ref.
+* Quantized KV cache (``--kv-bits {0,8,2}``): long-context decode is bound
+  by KV-cache HBM traffic — the whole cache is re-read per generated
+  token per layer.  ``--kv-bits 8`` stores int8 codes + per-(token, head)
+  scales, ``--kv-bits 2`` packed LogQuant-style log codes + one bf16
+  scale per (``kv_chunk`` tokens, head) — ~1/2 and ~1/8 the bf16 cache
+  bytes.  Prefill writes the cache already quantized and decode appends
+  codes, so codes+scales is the cache's *only* representation end to end:
+  attention consumes them directly through ``kernels.flash_decode``
+  (in-register tile dequant, streaming-softmax (m, l, acc), no fp copy of
+  the cache at any size — the zero-dequant guard of
+  tests/test_kv_cache.py pins it, MLA's latent cache included).  Under a
+  mesh the cache's sequence axis is split across the model axis and each
+  device flash-decodes its shard; the shards merge by one tiny
+  max/sum-shifted partial-softmax collective — zero cache collectives.
 
 ``--kernel-check`` is deprecated: the keep-packed forward now routes
 *every* projection through ``quant_matmul`` and the full-forward parity
@@ -155,6 +169,14 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
     return jnp.concatenate(toks, axis=1)
 
 
+def kv_cache_resident_bytes(cache) -> int:
+    """Total bytes resident in a KV-cache tree (codes + scales for a
+    quantized cache, fp activations otherwise) — the per-token decode
+    HBM traffic is proportional to this."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache))
+
+
 def resident_weight_bytes(params) -> tuple[int, int]:
     """(packed_bytes, fp_bytes) resident in the tree: bytes held by
     ``PackedWeight`` leaves vs plain fp leaves."""
@@ -212,6 +234,11 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy); every token "
                     "including the first is sampled, keyed by --seed")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="KV-cache precision: 0 = activation dtype "
+                    "(default), 8 = int8 codes + per-token scales, 2 = "
+                    "packed log codes + per-chunk scales; decode attends "
+                    "on the codes directly (kernels.flash_decode)")
     ap.add_argument("--packed", default=None, metavar="DIR",
                     help="serve from a packed RSQ artifact (written by "
                     "launch.quantize --pack-out): weights travel host->"
@@ -244,6 +271,13 @@ def main(argv=None):
               "running the one-entry startup check anyway")
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
+    if args.kv_bits is not None:
+        if args.kv_bits not in (0, 2, 8):
+            ap.error(f"--kv-bits {args.kv_bits} is not supported — use 0 "
+                     "(KV cache in the activation dtype), 8 (int8 + "
+                     "per-token scales) or 2 (packed log codes + "
+                     "per-chunk scales)")
+        cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
     model = build_model(cfg)
     if args.packed:
         from repro.checkpoint.packed import (load_packed_forward_params,
@@ -277,6 +311,15 @@ def main(argv=None):
     print(f"generated {out.shape} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s, loop={args.loop})")
     print("sample:", out[0][:16].tolist())
+    if cfg.kv_bits:
+        s = args.prompt_len + args.gen
+        fp_model = build_model(dataclasses.replace(cfg, kv_bits=0))
+        qb = kv_cache_resident_bytes(
+            jax.eval_shape(lambda: model.init_cache(args.batch, s)))
+        fb = kv_cache_resident_bytes(
+            jax.eval_shape(lambda: fp_model.init_cache(args.batch, s)))
+        print(f"kv cache resident: {qb / 1e6:.2f}MB (kv_bits="
+              f"{cfg.kv_bits}) vs {fb / 1e6:.2f}MB fp — ratio {qb / fb:.3f}")
     return out
 
 

@@ -87,7 +87,7 @@ def cache_shardings(cache_shapes, cfg: ModelConfig, shape: ShapeConfig,
         off = 1 if stacked else 0  # leading n_groups axis
         base = [None] * (nd - off)
         bdim = 0
-        if name in ("k", "v", "c", "r", "ks", "vs"):
+        if name in ("k", "v", "c", "r", "ks", "vs", "cs", "rs"):
             if dp_ok:
                 base[bdim] = dp_e
             base[1] = seq_entry(leaf.shape[off + 1])

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantizer import dequantize_packed
+from repro.kernels.flash_decode.ops import flash_decode, mla_flash_decode
 from repro.kernels.quant_matmul.ops import (is_packed, mla_latent_weights,
                                             quant_matmul, quant_matmul_t)
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
@@ -177,7 +178,7 @@ def decode_attention(
     return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
 
 
-# ----------------------------------------------------------- int8 KV cache
+# ------------------------------------------------------- quantized KV cache
 
 
 def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -194,8 +195,160 @@ def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 def kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """Full-tensor fp materialization of an int8 cache.
+
+    Debug/test-only: the serving decode path consumes codes directly
+    (``decode_attention_quantized``); the zero-dequant guard counts any
+    call to this during generate as a failure."""
     return (q.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
             ).astype(dtype)
+
+
+# 2-bit log-distributed codes (LogQuant-style): value = scale * LEVELS[code].
+# Codes 0..3 are sign x {outer, inner} log levels; one bf16 scale per
+# (chunk-of-tokens, head) group; 16 codes packed per uint32 word along the
+# feature axis.
+KV_LOG_LEVELS = (-1.0, -0.25, 0.25, 1.0)
+
+
+def kv_pack(codes: jax.Array) -> jax.Array:
+    """Pack (..., D) 2-bit codes into (..., ceil(D/16)) uint32 words
+    (code j of a word at bits [2j, 2j+2); ragged D zero-padded)."""
+    d = codes.shape[-1]
+    pad = (-d) % 16
+    if pad:
+        widths = [(0, 0)] * (codes.ndim - 1) + [(0, pad)]
+        codes = jnp.pad(codes, widths)
+    c = codes.astype(jnp.uint32).reshape(*codes.shape[:-1], -1, 16)
+    shifts = jnp.arange(16, dtype=jnp.uint32) * 2
+    return jnp.sum(c << shifts, axis=-1).astype(jnp.uint32)
+
+
+def kv_unpack(words: jax.Array, d: int) -> jax.Array:
+    """(..., ceil(D/16)) uint32 -> (..., D) int32 codes in 0..3."""
+    shifts = jnp.arange(16, dtype=jnp.uint32) * 2
+    c = ((words[..., None] >> shifts) & jnp.uint32(3)).astype(jnp.int32)
+    return c.reshape(*words.shape[:-1], -1)[..., :d]
+
+
+def kv_log_scales(x: jax.Array, chunk: int) -> jax.Array:
+    """Per-(chunk, head) log scales: amax of |x| over each ``chunk``-token
+    group and the feature axis.  x: (B, T, ..., D) -> (B, ceil(T/chunk), ...)
+    bf16 (ragged T zero-padded — padded rows never decode)."""
+    xf = jnp.abs(x.astype(jnp.float32))
+    b, t = x.shape[:2]
+    pad = (-t) % chunk
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (xf.ndim - 2)
+        xf = jnp.pad(xf, widths)
+    xf = xf.reshape(b, -1, chunk, *x.shape[2:])
+    amax = jnp.max(xf, axis=(2, -1))
+    return jnp.maximum(amax, 1e-8).astype(jnp.bfloat16)
+
+
+def _kv_log_codes(xf: jax.Array, scale: jax.Array) -> jax.Array:
+    """Encode f32 values against a per-(token, head) scale (shape
+    ``xf.shape[:-1]``): |x|/scale > 0.5 picks the outer level, sign picks
+    the half — code = 2 + magcode for x >= 0, 1 - magcode otherwise.
+    Values beyond the scale clip to the outer level (the chunk-leader
+    rule: decode-appended tokens reuse their chunk's first-token scale)."""
+    s = jnp.maximum(scale.astype(jnp.float32), 1e-8)[..., None]
+    magcode = (jnp.abs(xf) / s > 0.5).astype(jnp.int32)
+    return jnp.where(xf >= 0, 2 + magcode, 1 - magcode)
+
+
+def kv_log_encode(x: jax.Array, scales: jax.Array, chunk: int) -> jax.Array:
+    """x: (B, T, ..., D) + per-chunk scales -> (B, T, ..., ceil(D/16))
+    packed uint32 codes."""
+    t = x.shape[1]
+    s_tok = jnp.repeat(scales, chunk, axis=1)[:, :t]
+    return kv_pack(_kv_log_codes(x.astype(jnp.float32), s_tok))
+
+
+def kv_log_decode(packed: jax.Array, scales: jax.Array, *, d: int,
+                  chunk: int, dtype=jnp.float32) -> jax.Array:
+    """Full-tensor fp materialization of a 2-bit cache — debug/test-only,
+    same guard contract as ``kv_dequantize``."""
+    c = kv_unpack(packed, d)
+    t = packed.shape[1]
+    s_tok = jnp.repeat(scales.astype(jnp.float32), chunk, axis=1)[:, :t]
+    lut = jnp.array(KV_LOG_LEVELS, jnp.float32)
+    return (lut[c] * s_tok[..., None]).astype(dtype)
+
+
+def kv_cache_quantize(x: jax.Array, *, kv_bits: int,
+                      chunk: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Quantize a prefill-length KV tensor into (codes, scales) as stored
+    in the cache: int8 per-token scales (kv_bits=8) or packed 2-bit codes
+    with per-chunk log scales (kv_bits=2)."""
+    if kv_bits == 8:
+        return kv_quantize(x)
+    assert kv_bits == 2, kv_bits
+    scales = kv_log_scales(x, chunk)
+    return kv_log_encode(x, scales, chunk), scales
+
+
+def kv_cache_update(codes: jax.Array, scales: jax.Array, x: jax.Array,
+                    pos: jax.Array, *, kv_bits: int,
+                    chunk: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Quantize one new token x: (B, 1, ..., D) and write it into the
+    (codes, scales) cache at ``pos`` — the decode append never leaves the
+    quantized domain.
+
+    kv_bits=2 chunk-leader rule: the token at a chunk boundary stamps the
+    chunk's scale from its own amax; later tokens in the chunk reuse it
+    (their overflow clips to the outer log level).  Revisiting the scale
+    would re-code earlier tokens — a full-cache rewrite per step, exactly
+    the traffic this cache layout removes."""
+    if kv_bits == 8:
+        q, sc = kv_quantize(x)
+        codes = jax.lax.dynamic_update_slice_in_dim(codes, q, pos, 1)
+        scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, pos, 1)
+        return codes, scales
+    assert kv_bits == 2, kv_bits
+    ci = pos // chunk
+    cur = jax.lax.dynamic_slice_in_dim(scales, ci, 1, 1)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    lead = jnp.maximum(amax, 1e-8).astype(scales.dtype)
+    sc = jnp.where(pos % chunk == 0, lead, cur)
+    tok = kv_pack(_kv_log_codes(x.astype(jnp.float32), sc))
+    codes = jax.lax.dynamic_update_slice_in_dim(codes, tok, pos, 1)
+    scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, ci, 1)
+    return codes, scales
+
+
+def _fd_mesh_args(ctx, batch: int) -> dict:
+    """ParallelCtx -> flash_decode mesh kwargs: split the cache sequence
+    axis over the model axis; include the data axes in the specs only when
+    the batch actually divides over them (else GSPMD would have to
+    re-gather the dp-sharded cache batch into the shard_map)."""
+    if ctx is None or not getattr(ctx, "enabled", False) or ctx.tp is None:
+        return {"mesh": None, "axis": None, "dp": None}
+    dp = None
+    if ctx.dp and ctx.axis_size("dp") > 1 and batch % ctx.axis_size("dp") == 0:
+        dp = ctx.dp if len(ctx.dp) != 1 else ctx.dp[0]
+    return {"mesh": ctx.mesh, "axis": ctx.tp, "dp": dp}
+
+
+def decode_attention_quantized(q: jax.Array, k_codes: jax.Array,
+                               k_scales: jax.Array, v_codes: jax.Array,
+                               v_scales: jax.Array, pos: jax.Array, *,
+                               kv_bits: int, chunk: int = 1,
+                               ctx=None) -> jax.Array:
+    """Single-token attention directly against the quantized cache.
+
+    q: (B, 1, H, Dh); codes/scales as stored by ``kv_cache_update``.
+    Same GQA contraction discipline as ``decode_attention`` ((KV, G)
+    groups, never a head-repeated cache) but the cache stays codes all the
+    way into the kernel tile — no fp copy of any size S tensor."""
+    b, _, h, dh = q.shape
+    kv_heads = k_codes.shape[2]
+    g = h // kv_heads
+    qf = (q.astype(jnp.float32) * (dh ** -0.5)).reshape(b, kv_heads, g, dh)
+    out = flash_decode(qf, k_codes, k_scales, v_codes, v_scales, pos,
+                       kv_bits=kv_bits, chunk=chunk, dv=dh,
+                       **_fd_mesh_args(ctx, b))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
 # ------------------------------------------------------------------ GQA block
@@ -307,11 +460,19 @@ def apply_mla(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
     return (y, col) if colsum else y
 
 
-def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
+def mla_decode(p, cfg, x, c_cache, rope_cache, pos, *, c_scale=None,
+               r_scale=None, kv_bits: int = 0, chunk: int = 1, ctx=None):
     """Latent-space ("absorbed") MLA decode: the KV cache stores only the
     compressed c_kv (kvr) + shared rope key (dr) per token.
 
     x: (B, 1, D); c_cache: (B, S, kvr); rope_cache: (B, S, dr).
+
+    With ``kv_bits`` in {8, 2} the caches are codes (+ ``c_scale`` /
+    ``r_scale``) and the latent attention runs through
+    ``mla_flash_decode`` — MLA's absorbed decode is 1-kv-head attention in
+    latent space (scores q_lat.c + q_rope.r, values the latents), so the
+    quantized path consumes the c and r codes as separate operands and
+    never materializes the latent cache (or a concat of it) in fp.
 
     The absorbed trick contracts ``wkv_b`` per-head (two contractions
     against the latent cache) rather than as one GEMM.  A packed
@@ -360,6 +521,18 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos):
 
     q_lat = absorb_k(q_nope)
     scale = (dn + dr) ** -0.5
+    if kv_bits in (8, 2):
+        # quantized latent cache: fold the scale into the queries, attend
+        # on codes, normalize once in the wrapper
+        ql = (q_lat.astype(jnp.float32) * scale)[:, 0]
+        qr = (q_rope.astype(jnp.float32) * scale)[:, 0]
+        ctx_lat = mla_flash_decode(
+            ql, qr, c_cache, c_scale, rope_cache, r_scale, pos,
+            kv_bits=kv_bits, chunk=chunk, dl=kvr, dr=dr,
+            **_fd_mesh_args(ctx, b))[:, None]  # (B, 1, H, kvr)
+        y = linear(expand_v(ctx_lat).reshape(b, 1, h * dv).astype(x.dtype),
+                   p["wo"])
+        return y
     s_lat = jnp.einsum("bthk,bsk->bths", q_lat, c_cache.astype(jnp.float32))
     s_rope = jnp.einsum("bthd,bsd->bths", q_rope.astype(jnp.float32),
                         rope_cache.astype(jnp.float32))

@@ -171,14 +171,31 @@ def apply_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None,
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
         mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
-        cache = {"k": k, "v": v}
+        if cfg.kv_bits in (8, 2):
+            # prefill writes the cache already quantized — decode appends
+            # stay quantized too, so codes+scales is the *only* cache
+            # representation end-to-end (training/calib forwards discard
+            # the cache and XLA dead-code-eliminates the quantize)
+            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+            kq, ks = att.kv_cache_quantize(k, kv_bits=cfg.kv_bits, chunk=ch)
+            vq, vs = att.kv_cache_quantize(v, kv_bits=cfg.kv_bits, chunk=ch)
+            cache = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        else:
+            cache = {"k": k, "v": v}
     elif meta.mixer == "mla":
         b, t, _ = h.shape
         q, k, v, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, positions)
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
         mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
-        cache = {"c": c_kv, "r": k_rope}
+        if cfg.kv_bits in (8, 2):
+            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+            cq, cs = att.kv_cache_quantize(c_kv, kv_bits=cfg.kv_bits, chunk=ch)
+            rq, rs = att.kv_cache_quantize(k_rope, kv_bits=cfg.kv_bits,
+                                           chunk=ch)
+            cache = {"c": cq, "cs": cs, "r": rq, "rs": rs}
+        else:
+            cache = {"c": c_kv, "r": k_rope}
     elif meta.mixer == "mamba":
         mix, (conv_s, ssm_s) = ssm_lib.apply_mamba(p["mixer"], cfg, h,
                                                    return_state=True)
@@ -215,17 +232,21 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
     new_cache = dict(cache)
     if meta.mixer == "attn":
         q, k, v = att.gqa_qkv(p["mixer"], cfg, h, pos[None])
-        if cfg.kv_bits == 8:  # int8 KV cache (+ per-token-head scales)
-            kq, ks = att.kv_quantize(k)
-            vq, vs = att.kv_quantize(v)
-            upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(c, u, pos, 1)
-            new_cache.update(
-                k=upd(cache["k"], kq), v=upd(cache["v"], vq),
-                ks=upd(cache["ks"], ks), vs=upd(cache["vs"], vs))
-            out = att.decode_attention(
-                q, att.kv_dequantize(new_cache["k"], new_cache["ks"], x.dtype),
-                att.kv_dequantize(new_cache["v"], new_cache["vs"], x.dtype),
-                pos)
+        if cfg.kv_bits in (8, 2):
+            # quantized cache: append the new token's codes+scales and
+            # attend directly on the codes (flash_decode dequantizes tile
+            # by tile in-register) — no fp copy of the cache, ever; the
+            # old path's per-step full-cache kv_dequantize was 3x the
+            # fundamental decode HBM traffic per layer per token
+            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+            kc, ks = att.kv_cache_update(cache["k"], cache["ks"], k, pos,
+                                         kv_bits=cfg.kv_bits, chunk=ch)
+            vc, vs = att.kv_cache_update(cache["v"], cache["vs"], v, pos,
+                                         kv_bits=cfg.kv_bits, chunk=ch)
+            new_cache.update(k=kc, ks=ks, v=vc, vs=vs)
+            out = att.decode_attention_quantized(
+                q, kc, ks, vc, vs, pos, kv_bits=cfg.kv_bits, chunk=ch,
+                ctx=ctx)
         else:
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
@@ -234,10 +255,23 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
         mix = linear(out.reshape(b, 1, -1), p["mixer"]["wo"])
     elif meta.mixer == "mla":
         _, _, _, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, pos[None])
-        c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv, pos, 1)
-        r_cache = jax.lax.dynamic_update_slice_in_dim(cache["r"], k_rope, pos, 1)
-        mix = att.mla_decode(p["mixer"], cfg, h, c_cache, r_cache, pos)
-        new_cache.update(c=c_cache, r=r_cache)
+        if cfg.kv_bits in (8, 2):
+            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+            cc, cs = att.kv_cache_update(cache["c"], cache["cs"], c_kv, pos,
+                                         kv_bits=cfg.kv_bits, chunk=ch)
+            rc, rs = att.kv_cache_update(cache["r"], cache["rs"], k_rope, pos,
+                                         kv_bits=cfg.kv_bits, chunk=ch)
+            mix = att.mla_decode(p["mixer"], cfg, h, cc, rc, pos, c_scale=cs,
+                                 r_scale=rs, kv_bits=cfg.kv_bits, chunk=ch,
+                                 ctx=ctx)
+            new_cache.update(c=cc, cs=cs, r=rc, rs=rs)
+        else:
+            c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv,
+                                                          pos, 1)
+            r_cache = jax.lax.dynamic_update_slice_in_dim(cache["r"], k_rope,
+                                                          pos, 1)
+            mix = att.mla_decode(p["mixer"], cfg, h, c_cache, r_cache, pos)
+            new_cache.update(c=c_cache, r=r_cache)
     elif meta.mixer == "mamba":
         mix, (conv_s, ssm_s) = ssm_lib.mamba_decode(
             p["mixer"], cfg, h, cache["conv"], cache["ssm"])
@@ -393,6 +427,11 @@ class Model:
     """Functional model wrapper for one ModelConfig."""
 
     def __init__(self, cfg: ModelConfig, ctx: ParallelCtx = LOCAL):
+        if cfg.kv_bits not in (0, 2, 8):
+            raise ValueError(
+                f"kv_bits={cfg.kv_bits} is not supported — use 0 (KV cache "
+                "in the activation dtype), 8 (int8 codes + per-token-head "
+                "scales) or 2 (packed log codes + per-chunk scales)")
         self.cfg = cfg
         self.ctx = ctx
         self.dtype = jnp.dtype(cfg.dtype)
@@ -532,14 +571,23 @@ class Model:
         x, _ = self.hidden_states(params, tokens, **kw)
         return self.head_logits(params, x)
 
+    def _cache_len(self, s: int) -> int:
+        """Allocated cache length: quantized caches round up to a
+        ``kv_chunk`` multiple so flash_decode always has an aligned
+        sequence tile (scale rows stay whole; the tail is position-masked)."""
+        if self.cfg.kv_bits in (8, 2):
+            ch = self.cfg.kv_chunk
+            return -(-s // ch) * ch
+        return s
+
     # --------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, media=None, frames=None,
                 cache_len: Optional[int] = None):
         """Returns (last_logits (B, V), cache). Cache length ``cache_len``
-        (defaults to T)."""
+        (defaults to T; quantized caches round up to a kv_chunk multiple)."""
         cfg, ctx = self.cfg, self.ctx
         b, t = tokens.shape
-        s = cache_len or t
+        s = self._cache_len(cache_len or t)
         x = embed_lookup(params["embed"], tokens).astype(self.dtype)
         x = ctx.constrain_act(x)
         positions = jnp.arange(t)
@@ -547,13 +595,21 @@ class Model:
             media = self._encode(params, frames)
 
         def pad_entry(c):
-            # only sequence-indexed entries (self-attn KV, MLA latents) grow
+            # only sequence-indexed entries (self-attn KV, MLA latents) grow;
+            # quantized caches also carry scale rows — per token for kv8,
+            # per kv_chunk for kv2 (s is already a chunk multiple)
+            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+
             def f(key, a):
                 if key in ("k", "v", "c", "r"):
-                    pad = [(0, 0)] * a.ndim
-                    pad[1] = (0, s - t)
-                    return jnp.pad(a, pad)
-                return a
+                    tgt = s
+                elif key in ("ks", "vs", "cs", "rs"):
+                    tgt = s // ch
+                else:
+                    return a
+                pad = [(0, 0)] * a.ndim
+                pad[1] = (0, tgt - a.shape[1])
+                return jnp.pad(a, pad)
             return {k: (f(k, v) if not isinstance(v, (dict, tuple)) else v)
                     for k, v in c.items()}
 
@@ -586,21 +642,42 @@ class Model:
         cfg = self.cfg
         kvh, dh = cfg.n_kv_heads, cfg.head_dim
         dt = self.dtype
+        cache_len = self._cache_len(cache_len)
+        ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+        n_sc = cache_len // ch  # scale rows of a quantized cache
+
+        def qkv_entry(d: int):
+            """(codes, scales) zero pair for one quantized cache tensor of
+            feature width d (head axes supplied by the caller)."""
+            if cfg.kv_bits == 8:
+                return ((cache_len, d), jnp.int8), ((cache_len,), jnp.bfloat16)
+            return ((cache_len, -(-d // 16)), jnp.uint32), (
+                (n_sc,), jnp.bfloat16)
 
         def entry(meta: BlockMeta):
             c = {}
             if meta.mixer == "attn":
-                if cfg.kv_bits == 8:
-                    c = {"k": jnp.zeros((batch, cache_len, kvh, dh), jnp.int8),
-                         "v": jnp.zeros((batch, cache_len, kvh, dh), jnp.int8),
-                         "ks": jnp.zeros((batch, cache_len, kvh), jnp.bfloat16),
-                         "vs": jnp.zeros((batch, cache_len, kvh), jnp.bfloat16)}
+                if cfg.kv_bits in (8, 2):
+                    (cd, cdt), (sd, sdt) = qkv_entry(dh)
+                    codes = jnp.zeros((batch, cd[0], kvh) + cd[1:], cdt)
+                    scales = jnp.zeros((batch, sd[0], kvh), sdt)
+                    c = {"k": codes, "v": codes, "ks": scales, "vs": scales}
                 else:
                     c = {"k": jnp.zeros((batch, cache_len, kvh, dh), dt),
                          "v": jnp.zeros((batch, cache_len, kvh, dh), dt)}
             elif meta.mixer == "mla":
-                c = {"c": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt),
-                     "r": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dt)}
+                if cfg.kv_bits in (8, 2):
+                    (cd, cdt), (sd, sdt) = qkv_entry(cfg.kv_lora_rank)
+                    (rd, rdt), _ = qkv_entry(cfg.qk_rope_dim)
+                    c = {"c": jnp.zeros((batch,) + cd, cdt),
+                         "cs": jnp.zeros((batch,) + sd, sdt),
+                         "r": jnp.zeros((batch,) + rd, rdt),
+                         "rs": jnp.zeros((batch,) + sd, sdt)}
+                else:
+                    c = {"c": jnp.zeros((batch, cache_len, cfg.kv_lora_rank),
+                                        dt),
+                         "r": jnp.zeros((batch, cache_len, cfg.qk_rope_dim),
+                                        dt)}
             elif meta.mixer == "mamba":
                 c = {"conv": jnp.zeros(
                         (batch, cfg.ssm_conv_width - 1,

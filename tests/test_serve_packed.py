@@ -58,7 +58,10 @@ def artifact_dir(tmp_path_factory, tiny_model_params):
 
 
 class _Guard:
-    """Counts every fp materialization of a packed weight."""
+    """Counts every fp materialization of a packed weight — and, since
+    PR 7, of the quantized KV cache (kv_dequantize / kv_log_decode are
+    debug-only materializers; serving attends on codes directly through
+    kernels.flash_decode)."""
 
     def __init__(self, monkeypatch):
         self.calls: list[str] = []
@@ -75,6 +78,10 @@ class _Guard:
         monkeypatch.setattr(att, "dequantize_packed", deq)
         monkeypatch.setattr(cp, "dequantize_entry",
                             wrap("dequantize_entry", cp.dequantize_entry))
+        monkeypatch.setattr(att, "kv_dequantize",
+                            wrap("kv_dequantize", att.kv_dequantize))
+        monkeypatch.setattr(att, "kv_log_decode",
+                            wrap("kv_log_decode", att.kv_log_decode))
 
 
 @pytest.mark.parametrize("arch", ["deepseek-v2-236b", "jamba-v0.1-52b"])
