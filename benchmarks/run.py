@@ -16,13 +16,15 @@ fields (``cold_total_s``, ``compile_s``) are recorded for the trajectory
 but never gated: compile time is XLA-version and cache-state noise, and
 gating on it made the guard cry wolf (see ROADMAP).
 
-``BENCH_serve.json`` additionally gates the packed/fp decode *ratio* of
-the fresh result: packed decode falling more than ``SERVE_RATIO_TOL``
-(25%) below fp decode fails the guard.  Unlike the wall-time gate this
-is machine-independent — both paths run interleaved on the same box —
-and it is exactly the regression the serving stack exists to prevent
-(PR-4's python-dispatch decode loop shipped packed slower than fp and
-the guard passed silently; see ROADMAP).
+``BENCH_serve.json`` additionally gates same-box *ratios* of the fresh
+result at ``SERVE_RATIO_TOL`` (25%): packed vs fp decode, quantized-KV
+vs fp decode at the longest context, and (PR 8) the serve engine's
+sustained tok/s vs the fixed-batch baseline at equal load.  Unlike the
+wall-time gate these are machine-independent — both sides of each ratio
+run on the same box in the same bench — and each is exactly the
+regression its subsystem exists to prevent (PR-4's python-dispatch
+decode loop shipped packed slower than fp and the guard passed
+silently; see ROADMAP).
 
 CI runs this gate as a non-blocking job (.github/workflows/ci.yml).
 ``--no-regression-check`` skips the guard (e.g. when moving the
@@ -118,6 +120,18 @@ def check_serve_ratio(fresh: dict) -> list[str]:
                     f"S={s} is {float(r):.2f}x slower than fp (tolerance "
                     f"{SERVE_RATIO_TOL:.2f}x): the quantized KV cache "
                     "must not lose decode to the fp cache")
+    # continuous-batching sustained-throughput gate (PR 8): the engine
+    # leg serves the same requests as a fixed-batch baseline padded to
+    # each wave's longest budget; the engine retiring early and
+    # backfilling freed slots is its whole point, so sustaining fewer
+    # useful tok/s than the fixed batch (beyond tolerance) is structural
+    r = (fresh.get("engine") or {}).get("sustained_vs_fixed_ratio")
+    if r is not None and float(r) > SERVE_RATIO_TOL:
+        bad.append(
+            f"BENCH_serve.json: engine sustained decode is {float(r):.2f}x "
+            f"slower than the fixed-batch baseline (tolerance "
+            f"{SERVE_RATIO_TOL:.2f}x): continuous batching must not lose "
+            "sustained throughput to fixed waves at equal load")
     return bad
 
 

@@ -45,6 +45,20 @@ allocated ``kv_cache_resident_bytes`` and ``kv_bytes_ratio_vs_bf16``
 ratio at the longest length with the same ``SERVE_RATIO_TOL`` — a
 quantized cache that decodes slower than fp defeats its purpose.
 
+An **engine leg** (PR 8) benches the continuous-batching serve engine
+(``repro.serving``): the same request set — one prompt length, budgets
+cycling 3 short : 1 long — runs through the engine on block-paged
+kv8 pools under a Poisson arrival trace and through ``generate`` in
+arrival-ordered max_slots-sized waves padded to each wave's longest
+budget.  Only
+requested tokens count on both sides; ``run.py`` gates
+``sustained_vs_fixed_ratio`` (fixed over engine sustained tok/s) at
+SERVE_RATIO_TOL — continuous batching must not lose sustained
+throughput to the fixed batch at equal load — and the engine wall time
+rides the generic ``steady_total_s`` gate.  p50/p99 request latency is
+recorded ungated (latency is arrival-pattern-shaped, not a regression
+signal at this scale).
+
 With >= 8 devices (CI's fake-8-device matrix entry) an extra **mesh leg**
 runs: a kernel-aligned model (every quantized d_out a multiple of
 128 x model-axis) is calibrated under a (2 data x 4 model) mesh, served
@@ -94,6 +108,15 @@ MESH_REPS = 3
 # the only variable.  Lengths are allocated cache rows (prompt = S - GEN).
 LC_BATCH, LC_GEN, LC_REPS = 4, 32, 3
 LC_LENGTHS = (512, 2048)
+
+# engine leg (PR 8): continuous batching on paged quantized KV vs the
+# fixed batch at equal load.  The workload is the mixed one continuous
+# batching targets — mostly short requests with an occasional long one
+# (3 short : 1 long in arrival order), so every fixed wave is dragged to
+# the long budget and burns (long - short) wasted steps per short
+# request while the engine retires shorts and backfills their slots.
+ENG_N_REQ, ENG_PROMPT, ENG_SLOTS, ENG_PAGES = 12, 32, 4, 16
+ENG_BURST, ENG_BUDGETS, ENG_RATE, ENG_REPS = 8, (8, 8, 8, 128), 2.0, 3
 
 
 def _quantize_to_artifact(cfg, ctx=None, calib_rows=16, calib_len=64,
@@ -289,6 +312,92 @@ def _long_context_leg() -> dict:
     }
 
 
+def _engine_leg() -> dict:
+    """Continuous batching (serving.Engine, Poisson arrivals) vs the
+    fixed-batch scan loop at equal load.
+
+    The same ``ENG_N_REQ`` requests — one shared prompt length, budgets
+    cycling 3 short : 1 long — run (a) through the engine on paged kv8
+    pools under a Poisson arrival trace and (b) through ``generate`` in
+    arrival-ordered ``ENG_SLOTS``-sized waves, each wave padded to its
+    longest budget (the fixed shape cannot retire early or backfill a
+    freed row).  Only
+    the *requested* tokens count toward throughput on both sides, so the
+    fixed batch pays for its wasted trailing steps.  ``run.py`` gates
+    ``sustained_vs_fixed_ratio`` (fixed tok/s over engine sustained
+    tok/s, > 1 = engine slower) at SERVE_RATIO_TOL: continuous batching
+    losing sustained throughput to the fixed batch at equal load is a
+    regression of the engine's whole point.  ``steady_total_s`` (best
+    engine wall over reps) rides the generic wall-time gate."""
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticCorpus
+    from repro.launch.serve import generate
+    from repro.models import build_model
+    from repro.serving import Engine, ServeRequest, poisson_trace, run_trace
+
+    cfg = dataclasses.replace(
+        get_config(ARCH).reduced(), dtype="float32",
+        n_layers=N_LAYERS, d_model=D_MODEL, vocab_size=512, kv_bits=8)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+    prompts = corpus.sample(jax.random.key(4), ENG_N_REQ, ENG_PROMPT)
+    budgets = [ENG_BUDGETS[i % len(ENG_BUDGETS)] for i in range(ENG_N_REQ)]
+    reqs = [ServeRequest(tokens=prompts[i].tolist(),
+                         max_new_tokens=budgets[i])
+            for i in range(ENG_N_REQ)]
+    n_req_tok = sum(budgets)
+
+    max_pages = -(-(ENG_PROMPT + max(ENG_BUDGETS)) // model.codec.page_tokens)
+
+    def engine_run():
+        engine = Engine(model, params, max_slots=ENG_SLOTS,
+                        n_pages=ENG_PAGES, max_pages_per_request=max_pages,
+                        burst_steps=ENG_BURST)
+        stats = run_trace(engine, poisson_trace(reqs, rate=ENG_RATE,
+                                                seed=0))
+        assert stats["n_tokens"] == n_req_tok, stats["n_tokens"]
+        assert engine.pools.free_pages() == ENG_PAGES, "pages leaked"
+        return stats
+
+    engine_run()  # rep 0 compiles the prefill + burst programs, untimed
+    best = min((engine_run() for _ in range(ENG_REPS)),
+               key=lambda s: s["wall_s"])
+
+    n_gen = max(budgets)
+    waves = [prompts[i:i + ENG_SLOTS]
+             for i in range(0, ENG_N_REQ, ENG_SLOTS)]
+    for w in waves:  # compile pass
+        jax.block_until_ready(generate(model, params, w, n_gen))
+    fixed_s = None
+    for _ in range(ENG_REPS):
+        t0 = time.perf_counter()
+        for w in waves:
+            jax.block_until_ready(generate(model, params, w, n_gen))
+        dt = time.perf_counter() - t0
+        fixed_s = dt if fixed_s is None else min(fixed_s, dt)
+    fixed_tok_s = n_req_tok / fixed_s
+
+    return {
+        "arch": f"{ARCH}-smoke(d={D_MODEL},L={N_LAYERS})",
+        "kv_bits": 8,
+        "n_requests": ENG_N_REQ, "prompt_len": ENG_PROMPT,
+        "budgets": list(ENG_BUDGETS), "requested_tokens": n_req_tok,
+        "max_slots": ENG_SLOTS, "n_pages": ENG_PAGES,
+        "burst_steps": ENG_BURST, "arrival_rate": ENG_RATE,
+        "sustained_tok_s": round(best["sustained_tok_s"], 1),
+        "p50_latency_s": round(best["p50_latency_s"], 4),
+        "p99_latency_s": round(best["p99_latency_s"], 4),
+        "rounds": best["rounds"],
+        "steady_total_s": round(best["wall_s"], 4),
+        "fixed_batch_tok_s": round(fixed_tok_s, 1),
+        "fixed_batch_s": round(fixed_s, 4),
+        # > 1 = the engine sustains fewer useful tok/s than fixed waves
+        "sustained_vs_fixed_ratio": round(
+            fixed_tok_s / best["sustained_tok_s"], 4),
+    }
+
+
 def _mesh_leg() -> dict | None:
     """shard_map'd kernel serving on the fake multi-device mesh (CI's
     fake-8-device bench-guard entry): keep-packed generate with the
@@ -437,6 +546,13 @@ def run(table: Table | None = None):
                   f"S={s_max} decode_tok_s={leaf['decode_tok_s']} "
                   f"vs_fp={leaf['decode_vs_fp_ratio']} "
                   f"kv_bytes_vs_bf16={leaf['kv_bytes_ratio_vs_bf16']}")
+    eng = _engine_leg()
+    payload["engine"] = eng
+    table.add("engine_sustained", eng["steady_total_s"] * 1e6,
+              f"tok_s={eng['sustained_tok_s']} "
+              f"fixed={eng['fixed_batch_tok_s']} "
+              f"ratio={eng['sustained_vs_fixed_ratio']} "
+              f"p50={eng['p50_latency_s']}s p99={eng['p99_latency_s']}s")
     mesh = _mesh_leg()
     if mesh is not None:
         payload["packed_mesh"] = mesh

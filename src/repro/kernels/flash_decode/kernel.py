@@ -43,6 +43,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
 
@@ -167,6 +168,102 @@ def flash_decode_pallas(q, kq, ks, vq, vs, pos, *, kv_bits: int, chunk: int,
     return acc, m, l
 
 
+# --------------------------------------------------- paged (page-table) GQA
+
+
+def _paged_fd_kernel(tbl_ref, pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                     acc_ref, m_ref, l_ref, *, kv_bits: int, chunk: int,
+                     dh: int, dv: int, page: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i, kk = pl.program_id(0), pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, Dh), scale pre-folded
+    k = _dequant_kv(kq_ref[0, :, 0], ks_ref[0, :, 0], kv_bits=kv_bits,
+                    chunk=chunk, d=dh)   # (page, Dh)
+    v = _dequant_kv(vq_ref[0, :, 0], vs_ref[0, :, 0], kv_bits=kv_bits,
+                    chunk=chunk, d=dv)   # (page, Dv)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, page)
+    # logical position of tile kk's rows is kk*page regardless of which
+    # physical page the table routed here — fully masked (trailing) tiles
+    # are exact no-ops of _tile_update, so stale/trash table entries past
+    # a request's pos never perturb the result
+    idx = kk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = idx <= pos_ref[i, 0]
+    m_new, l_new, acc_new = _tile_update(
+        scores, v, valid, m_ref[0, 0], l_ref[0, 0], acc_ref[0, 0])
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+    acc_ref[0, 0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "page", "interpret"))
+def paged_flash_decode_pallas(tbl, pos, q, kq, ks, vq, vs, *, kv_bits: int,
+                              chunk: int, dh: int, dv: int, page: int,
+                              interpret: bool = True):
+    """GQA flash decode over a block-paged quantized cache -> raw partials.
+
+    The sequence axis is indirected through a per-request page table: tile
+    ``kk`` of request ``i`` streams physical page ``tbl[i, kk]`` from the
+    shared pools.  ``tbl``/``pos`` ride in as scalar-prefetch operands
+    (SMEM) so the page id is available to the BlockSpec index_map — the
+    kernel walks the table, it never sees a contiguous sequence axis.
+
+    tbl: (B, n_tiles) int32; pos: (B, 1) int32 per-request last valid row;
+    q: (B, KV, G, Dh) with the attention scale folded in;
+    kq/vq: (n_pages, page, KV, wk|wv) code pools; ks/vs:
+    (n_pages, page // chunk, KV) scale pools.  Returns the same f32
+    ``(acc, m, l)`` triple as :func:`flash_decode_pallas` — with identical
+    tile math, so paged == flat holds bitwise at a matched tile size."""
+    b, kv, g, _ = q.shape
+    n_tiles = tbl.shape[1]
+    assert page % chunk == 0, (page, chunk)
+    rows_c = page // chunk
+    wk, wv = kq.shape[-1], vq.shape[-1]
+    kernel = functools.partial(_paged_fd_kernel, kv_bits=kv_bits,
+                               chunk=chunk, dh=dh, dv=dv, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kv, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, q.shape[-1]),
+                         lambda i, j, kk, tbl, pos: (i, j, 0, 0)),
+            pl.BlockSpec((1, page, 1, wk),
+                         lambda i, j, kk, tbl, pos: (tbl[i, kk], 0, j, 0)),
+            pl.BlockSpec((1, rows_c, 1),
+                         lambda i, j, kk, tbl, pos: (tbl[i, kk], 0, j)),
+            pl.BlockSpec((1, page, 1, wv),
+                         lambda i, j, kk, tbl, pos: (tbl[i, kk], 0, j, 0)),
+            pl.BlockSpec((1, rows_c, 1),
+                         lambda i, j, kk, tbl, pos: (tbl[i, kk], 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dv), lambda i, j, kk, tbl, pos: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, kk, tbl, pos: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda i, j, kk, tbl, pos: (i, j, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl, pos, q, kq, ks, vq, vs)
+    return acc, m, l
+
+
 def _mla_fd_kernel(ql_ref, qr_ref, cq_ref, cs_ref, rq_ref, rs_ref, pos_ref,
                    acc_ref, m_ref, l_ref, *, kv_bits: int, chunk: int,
                    dl: int, dr: int, s_blk: int):
@@ -242,4 +339,93 @@ def mla_flash_decode_pallas(ql, qr, cq, cs, rq, rs, pos, *, kv_bits: int,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(ql, qr, cq, cs, rq, rs, pos)
+    return acc, m, l
+
+
+# --------------------------------------------------- paged (page-table) MLA
+
+
+def _paged_mla_fd_kernel(tbl_ref, pos_ref, ql_ref, qr_ref, cq_ref, cs_ref,
+                         rq_ref, rs_ref, acc_ref, m_ref, l_ref, *,
+                         kv_bits: int, chunk: int, dl: int, dr: int,
+                         page: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    i, kk = pl.program_id(0), pl.program_id(1)
+    ql = ql_ref[0].astype(jnp.float32)  # (H, dl), scale pre-folded
+    qr = qr_ref[0].astype(jnp.float32)  # (H, dr)
+    c = _dequant_kv(cq_ref[0], cs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                    d=dl)               # (page, dl) — keys *and* values
+    r = _dequant_kv(rq_ref[0], rs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                    d=dr)               # (page, dr)
+    scores = (jax.lax.dot_general(ql, c, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+              + jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32))
+    idx = kk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = idx <= pos_ref[i, 0]
+    m_new, l_new, acc_new = _tile_update(
+        scores, c, valid, m_ref[0], l_ref[0], acc_ref[0])
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "page", "interpret"))
+def paged_mla_flash_decode_pallas(tbl, pos, ql, qr, cq, cs, rq, rs, *,
+                                  kv_bits: int, chunk: int, dl: int,
+                                  dr: int, page: int,
+                                  interpret: bool = True):
+    """MLA (absorbed, latent-space) flash decode over block-paged pools.
+
+    tbl: (B, n_tiles) int32; pos: (B, 1) int32; ql/qr: (B, H, dl|dr) with
+    the attention scale folded in; cq/rq: (n_pages, page, wc|wr) latent /
+    rope code pools; cs/rs: (n_pages, page // chunk) scale pools.  Same
+    tile math as :func:`mla_flash_decode_pallas` (paged == flat bitwise at
+    a matched tile); values are the latents (v = c).  Returns f32
+    ``(acc, m, l)``: (B, H, dl) + 2x (B, H, 1)."""
+    b, h, _ = ql.shape
+    n_tiles = tbl.shape[1]
+    assert page % chunk == 0, (page, chunk)
+    rows_c = page // chunk
+    kernel = functools.partial(_paged_mla_fd_kernel, kv_bits=kv_bits,
+                               chunk=chunk, dl=dl, dr=dr, page=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, h, ql.shape[-1]),
+                         lambda i, kk, tbl, pos: (i, 0, 0)),
+            pl.BlockSpec((1, h, qr.shape[-1]),
+                         lambda i, kk, tbl, pos: (i, 0, 0)),
+            pl.BlockSpec((1, page, cq.shape[-1]),
+                         lambda i, kk, tbl, pos: (tbl[i, kk], 0, 0)),
+            pl.BlockSpec((1, rows_c), lambda i, kk, tbl, pos: (tbl[i, kk], 0)),
+            pl.BlockSpec((1, page, rq.shape[-1]),
+                         lambda i, kk, tbl, pos: (tbl[i, kk], 0, 0)),
+            pl.BlockSpec((1, rows_c), lambda i, kk, tbl, pos: (tbl[i, kk], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, dl), lambda i, kk, tbl, pos: (i, 0, 0)),
+            pl.BlockSpec((1, h, 1), lambda i, kk, tbl, pos: (i, 0, 0)),
+            pl.BlockSpec((1, h, 1), lambda i, kk, tbl, pos: (i, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, dl), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl, pos, ql, qr, cq, cs, rq, rs)
     return acc, m, l

@@ -35,10 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.flash_decode.kernel import (flash_decode_pallas,
-                                               mla_flash_decode_pallas)
-from repro.kernels.flash_decode.ref import (flash_decode_ref,
-                                            mla_flash_decode_ref)
+from repro.kernels.flash_decode.kernel import (
+    flash_decode_pallas, mla_flash_decode_pallas,
+    paged_flash_decode_pallas, paged_mla_flash_decode_pallas)
+from repro.kernels.flash_decode.ref import (
+    flash_decode_ref, mla_flash_decode_ref, paged_flash_decode_ref,
+    paged_mla_flash_decode_ref)
 
 try:  # jax >= 0.4.35
     from jax import shard_map as _shard_map
@@ -231,4 +233,61 @@ def mla_flash_decode(ql, qr, cq, cs, rq, rs, pos, *, kv_bits: int,
     acc, _, l = mla_flash_decode_ref(
         ql, qr, cq, cs, rq, rs, px, kv_bits=kv_bits, chunk=chunk, dl=dl,
         dr=dr, s_blk=s_blk or min(s, 512))
+    return _finalize(acc, l)
+
+
+# ----------------------------------------------------------------- paged
+
+
+def paged_flash_decode(tbl, pos, q, kq, ks, vq, vs, *, kv_bits: int,
+                       chunk: int, dv: int, page: int,
+                       use_kernel: bool | None = None):
+    """Single-token GQA attention over a block-paged quantized pool.
+
+    tbl: (B, n_tiles) int32 per-request page table (pad slots with the
+    trash page 0); pos: (B,) int32 per-request last valid position;
+    q: (B, KV, G, Dh) f32 scaled queries; kq/vq: (n_pages, page, KV, w·)
+    code pools; ks/vs: (n_pages, page // chunk, KV) scale pools.  Returns
+    (B, KV, G, Dv) f32.
+
+    Serving engines are meshless by design (the engine owns the batch
+    axis); there is deliberately no shard_map route here — the split-KV
+    policy of :func:`flash_decode` does not apply to paged pools, whose
+    sequence axis is virtual (the page table).
+    """
+    dh = q.shape[-1]
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    px = jnp.reshape(jnp.asarray(pos).astype(jnp.int32), (q.shape[0], 1))
+    if use_kernel:
+        acc, _, l = paged_flash_decode_pallas(
+            tbl, px, q, kq, ks, vq, vs, kv_bits=kv_bits, chunk=chunk,
+            dh=dh, dv=dv, page=page, interpret=_interpret())
+    else:
+        acc, _, l = paged_flash_decode_ref(
+            tbl, px, q, kq, ks, vq, vs, kv_bits=kv_bits, chunk=chunk,
+            dh=dh, dv=dv, page=page)
+    return _finalize(acc, l)
+
+
+def paged_mla_flash_decode(tbl, pos, ql, qr, cq, cs, rq, rs, *,
+                           kv_bits: int, chunk: int, dl: int, dr: int,
+                           page: int, use_kernel: bool | None = None):
+    """Single-token MLA latent attention over block-paged latent pools.
+
+    tbl: (B, n_tiles) int32; pos: (B,) int32; ql/qr: (B, H, dl|dr) scaled
+    absorbed queries; cq/rq: (n_pages, page, w·) code pools; cs/rs:
+    (n_pages, page // chunk) scale pools.  Returns (B, H, dl) f32.
+    Meshless, like :func:`paged_flash_decode`."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    px = jnp.reshape(jnp.asarray(pos).astype(jnp.int32), (ql.shape[0], 1))
+    if use_kernel:
+        acc, _, l = paged_mla_flash_decode_pallas(
+            tbl, px, ql, qr, cq, cs, rq, rs, kv_bits=kv_bits, chunk=chunk,
+            dl=dl, dr=dr, page=page, interpret=_interpret())
+    else:
+        acc, _, l = paged_mla_flash_decode_ref(
+            tbl, px, ql, qr, cq, cs, rq, rs, kv_bits=kv_bits, chunk=chunk,
+            dl=dl, dr=dr, page=page)
     return _finalize(acc, l)

@@ -126,3 +126,219 @@ def mla_flash_decode_ref(ql, qr, cq, cs, rq, rs, pos, *, kv_bits: int,
     l0 = jnp.zeros((b, h, 1), jnp.float32)
     (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n_tiles))
     return acc, m, l
+
+
+# --------------------------------------------------- paged (page-table) refs
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "page"))
+def paged_flash_decode_ref(tbl, pos, q, kq, ks, vq, vs, *, kv_bits: int,
+                           chunk: int, dh: int, dv: int, page: int):
+    """GQA partials over block-paged pools, matching
+    ``paged_flash_decode_pallas`` bitwise.
+
+    Same page-table indirection as the kernel — the scan walks
+    ``tbl[:, kk]`` and gathers one physical page per request per step
+    (``jnp.take`` of a (B, page, ·) slice: codes move, never fp) — and the
+    same ``_dequant_kv`` / ``_tile_update`` tile math.  ``pos`` is
+    per-request: (B,) or (B, 1) int32."""
+    b, kv, g, _ = q.shape
+    n_tiles = tbl.shape[1]
+    rows_c = page // chunk
+    qf = q.astype(jnp.float32)
+    px = jnp.reshape(pos, (b,)).astype(jnp.int32)
+
+    def one(kk, qh, kc, ksc, vc, vsc, p1, m1, l1, acc1):
+        # identical per-(batch, kv_head) tile math to _paged_fd_kernel
+        k = _dequant_kv(kc, ksc, kv_bits=kv_bits, chunk=chunk, d=dh)
+        v = _dequant_kv(vc, vsc, kv_bits=kv_bits, chunk=chunk, d=dv)
+        scores = jax.lax.dot_general(
+            qh, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        idx = kk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        return _tile_update(scores, v, idx <= p1, m1, l1, acc1)
+
+    def step(carry, kk):
+        acc, m, l = carry
+        pid = jax.lax.dynamic_slice_in_dim(tbl, kk, 1, 1)[:, 0]  # (B,)
+        k_t = jnp.moveaxis(jnp.take(kq, pid, axis=0), 1, 2)  # (B, KV, page, wk)
+        v_t = jnp.moveaxis(jnp.take(vq, pid, axis=0), 1, 2)
+        ks_t = jnp.moveaxis(jnp.take(ks, pid, axis=0), 1, 2)
+        vs_t = jnp.moveaxis(jnp.take(vs, pid, axis=0), 1, 2)
+        f = jax.vmap(jax.vmap(functools.partial(one, kk),
+                              in_axes=(0, 0, 0, 0, 0, None, 0, 0, 0)))
+        m_new, l_new, acc_new = f(qf, k_t, ks_t, v_t, vs_t, px, m, l, acc)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kv, g, dv), jnp.float32)
+    m0 = jnp.full((b, kv, g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n_tiles))
+    return acc, m, l
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "page"))
+def paged_mla_flash_decode_ref(tbl, pos, ql, qr, cq, cs, rq, rs, *,
+                               kv_bits: int, chunk: int, dl: int, dr: int,
+                               page: int):
+    """MLA partials over block-paged pools, matching
+    ``paged_mla_flash_decode_pallas`` bitwise; ``pos`` per-request."""
+    b, h, _ = ql.shape
+    n_tiles = tbl.shape[1]
+    rows_c = page // chunk
+    qlf, qrf = ql.astype(jnp.float32), qr.astype(jnp.float32)
+    px = jnp.reshape(pos, (b,)).astype(jnp.int32)
+
+    def one(kk, qlh, qrh, cc, csc, rc, rsc, p1, m1, l1, acc1):
+        c = _dequant_kv(cc, csc, kv_bits=kv_bits, chunk=chunk, d=dl)
+        r = _dequant_kv(rc, rsc, kv_bits=kv_bits, chunk=chunk, d=dr)
+        scores = (jax.lax.dot_general(qlh, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(qrh, r, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+        idx = kk * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        return _tile_update(scores, c, idx <= p1, m1, l1, acc1)
+
+    def step(carry, kk):
+        acc, m, l = carry
+        pid = jax.lax.dynamic_slice_in_dim(tbl, kk, 1, 1)[:, 0]
+        c_t = jnp.take(cq, pid, axis=0)   # (B, page, wc)
+        r_t = jnp.take(rq, pid, axis=0)
+        cs_t = jnp.take(cs, pid, axis=0)  # (B, rows_c)
+        rs_t = jnp.take(rs, pid, axis=0)
+        f = jax.vmap(functools.partial(one, kk))
+        m_new, l_new, acc_new = f(qlf, qrf, c_t, cs_t, r_t, rs_t, px, m, l,
+                                  acc)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, dl), jnp.float32)
+    m0 = jnp.full((b, h, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n_tiles))
+    return acc, m, l
+
+
+# ------------------------------------------------- chunked-prefill extension
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "page"))
+def paged_flash_extend_ref(tbl, q, k_new, v_new, kq, ks, vq, vs, start, *,
+                           kv_bits: int, chunk: int, dh: int, dv: int,
+                           page: int):
+    """Chunked-prefill GQA attention: an L-token query chunk attends to
+    the quantized pages of its *own request's* earlier chunks plus its fp
+    within-chunk keys/values (causal).
+
+    tbl: (n_past_tiles,) int32 page ids of the request's previous chunks
+    (``start = n_past_tiles * page`` — chunk boundaries are page-aligned,
+    so every past page is full and unmasked); q: (1, L, H, Dh) *unscaled*
+    queries; k_new/v_new: (1, L, KV, Dh|Dv) this chunk's fp keys/values.
+    Past pages dequantize tile-by-tile in-register (``_dequant_kv``) and
+    stream through the same ``_tile_update`` as decode; the fp chunk is
+    the final "tile" with a causal mask.  Returns (1, L, H, Dv)."""
+    _, L, h, _ = q.shape
+    kv = k_new.shape[2]
+    g = h // kv
+    n_past = tbl.shape[0]
+    qf = (q.astype(jnp.float32) * (dh ** -0.5))[0]          # (L, H, Dh)
+    qf = jnp.moveaxis(qf.reshape(L, kv, g, dh), 1, 0)       # (KV, L, g, Dh)
+    qf = qf.reshape(kv, L * g, dh)                          # rows = (l, g)
+    row_pos = jnp.repeat(start + jnp.arange(L), g)          # (L*g,)
+
+    def one_page(carry, pid):
+        m, l, acc = carry
+        kc, vc = jnp.take(kq, pid, axis=0), jnp.take(vq, pid, axis=0)
+        ksc, vsc = jnp.take(ks, pid, axis=0), jnp.take(vs, pid, axis=0)
+
+        def per_head(qh, kcj, kscj, vcj, vscj, m1, l1, acc1):
+            k = _dequant_kv(kcj, kscj, kv_bits=kv_bits, chunk=chunk, d=dh)
+            v = _dequant_kv(vcj, vscj, kv_bits=kv_bits, chunk=chunk, d=dv)
+            scores = jax.lax.dot_general(
+                qh, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)  # (L*g, page)
+            valid = jnp.ones((1, page), bool)  # past pages are full
+            return _tile_update(scores, v, valid, m1, l1, acc1)
+
+        m2, l2, acc2 = jax.vmap(per_head)(
+            qf, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(ksc, 1, 0),
+            jnp.moveaxis(vc, 1, 0), jnp.moveaxis(vsc, 1, 0), m, l, acc)
+        return (m2, l2, acc2), None
+
+    m0 = jnp.full((kv, L * g, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((kv, L * g, 1), jnp.float32)
+    acc0 = jnp.zeros((kv, L * g, dv), jnp.float32)
+    if n_past:
+        (m, l, acc), _ = jax.lax.scan(one_page, (m0, l0, acc0), tbl)
+    else:
+        m, l, acc = m0, l0, acc0
+
+    # final tile: this chunk's fp keys/values, causal within the chunk
+    kf = jnp.moveaxis(k_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dh)
+    vf = jnp.moveaxis(v_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dv)
+    kv_pos = start + jnp.arange(L)
+    causal = row_pos[:, None] >= kv_pos[None, :]            # (L*g, L)
+
+    def final(qh, kh, vh, m1, l1, acc1):
+        scores = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        return _tile_update(scores, vh, causal, m1, l1, acc1)
+
+    m, l, acc = jax.vmap(final)(qf, kf, vf, m, l, acc)
+    out = acc / jnp.maximum(l, 1e-30)                       # (KV, L*g, Dv)
+    out = jnp.moveaxis(out.reshape(kv, L, g, dv), 0, 1)     # (L, KV, g, Dv)
+    return out.reshape(L, h, dv)[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "page"))
+def paged_mla_flash_extend_ref(tbl, ql, qr, c_new, r_new, cq, cs, rq, rs,
+                               start, *, kv_bits: int, chunk: int, dl: int,
+                               dr: int, page: int):
+    """Chunked-prefill MLA latent attention: an L-token chunk's absorbed
+    queries attend to quantized latent pages of earlier chunks plus the fp
+    within-chunk latents (causal).  ql/qr: (L, H, dl|dr) *scaled* queries;
+    c_new/r_new: (L, dl|dr) fp latents of this chunk.  Returns (L, H, dl)
+    latent context."""
+    L, h, _ = ql.shape
+    n_past = tbl.shape[0]
+    qlf = ql.astype(jnp.float32).reshape(L * h, dl)
+    qrf = qr.astype(jnp.float32).reshape(L * h, dr)
+    row_pos = jnp.repeat(start + jnp.arange(L), h)
+
+    def one_page(carry, pid):
+        m, l, acc = carry
+        c = _dequant_kv(jnp.take(cq, pid, axis=0),
+                        jnp.take(cs, pid, axis=0), kv_bits=kv_bits,
+                        chunk=chunk, d=dl)
+        r = _dequant_kv(jnp.take(rq, pid, axis=0),
+                        jnp.take(rs, pid, axis=0), kv_bits=kv_bits,
+                        chunk=chunk, d=dr)
+        scores = (jax.lax.dot_general(qlf, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(qrf, r, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+        valid = jnp.ones((1, page), bool)
+        return _tile_update(scores, c, valid, m, l, acc), None
+
+    m0 = jnp.full((L * h, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((L * h, 1), jnp.float32)
+    acc0 = jnp.zeros((L * h, dl), jnp.float32)
+    if n_past:
+        (m, l, acc), _ = jax.lax.scan(one_page, (m0, l0, acc0), tbl)
+    else:
+        m, l, acc = m0, l0, acc0
+
+    cf = c_new.astype(jnp.float32)
+    rf = r_new.astype(jnp.float32)
+    kv_pos = start + jnp.arange(L)
+    causal = row_pos[:, None] >= kv_pos[None, :]
+    scores = (jax.lax.dot_general(qlf, cf, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+              + jax.lax.dot_general(qrf, rf, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32))
+    m, l, acc = _tile_update(scores, cf, causal, m, l, acc)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(L, h, dl)

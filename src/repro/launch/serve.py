@@ -54,6 +54,22 @@ Serving performance
   device flash-decodes its shard; the shards merge by one tiny
   max/sum-shifted partial-softmax collective — zero cache collectives.
 
+Engine serving (``--mode engine``)
+----------------------------------
+
+``--mode engine`` swaps the fixed-shape batch for the request-oriented
+serving engine (``repro.serving``): requests are ``ServeRequest`` objects
+with their own budget and ``SamplingParams``, arrive on a Poisson trace
+(``--arrival-rate`` per scheduling round), prefill into pages popped off
+a shared block-paged quantized KV pool (``--n-pages``; page = ``kv_chunk``
+tokens across every layer), decode continuously in bursts of
+``--burst-steps`` alongside whatever else is in flight, and retire by
+releasing their pages for reuse.  Per-request token streams are
+bit-identical to a single-request ``generate()`` call (pinned by
+tests/test_serving.py).  Requires ``--kv-bits 8`` or ``2`` — the pools
+store codes+scales, never fp.  See src/repro/serving/README.md for the
+API and the page-size math.
+
 ``--kernel-check`` is deprecated: the keep-packed forward now routes
 *every* projection through ``quant_matmul`` and the full-forward parity
 is pinned by tests/test_serve_packed.py.  The flag survives as a thin
@@ -75,6 +91,8 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import build_model
+from repro.serving import (Engine, RequestOutput, SamplingParams,  # noqa: F401
+                           ServeRequest, poisson_trace, run_trace)
 
 
 def _sample_token(logits, temperature: float, key, step) -> jax.Array:
@@ -135,6 +153,13 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
              temperature: float = 0.0, key=None, loop: str = "scan"):
     """prompts: (B, T) -> (B, n_gen) generated tokens.
 
+    .. deprecated:: the request-oriented serving API is the primary
+       surface now — build ``ServeRequest`` objects and drive them
+       through :func:`generate_batch` (fixed batch, this loop) or
+       ``serving.Engine`` (continuous batching over paged KV pools).
+       ``generate`` stays as the thin fixed-shape core both share: a
+       homogeneous batch, one prompt length, one temperature, one key.
+
     Greedy when ``temperature == 0``; otherwise categorical sampling of
     *every* token — including the first one, drawn from the prefill
     logits — with per-step keys ``fold_in(key, step)`` (``key`` is then
@@ -167,6 +192,48 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
         toks.append(tok)
         pos += 1
     return jnp.concatenate(toks, axis=1)
+
+
+def generate_batch(model, params, requests, *, loop: str = "scan"):
+    """Serve a list of ``ServeRequest`` through the fixed-batch scan loop.
+
+    The request-oriented twin of :func:`generate`: one request type shared
+    with ``serving.Engine``, same per-request token streams.  The
+    fixed-shape loop can only batch *homogeneous* requests — equal prompt
+    length and identical ``SamplingParams`` (one temperature / seed / eos
+    for the whole batch; per-request budgets are fine, longer requests
+    simply own the trailing tokens).  Heterogeneous workloads belong on
+    the engine, which exists precisely because this shape restriction is
+    what continuous batching removes.
+
+    Returns one token list per request, truncated to its
+    ``max_new_tokens`` (eos handling too is engine-only here: the fixed
+    batch runs to the longest budget regardless)."""
+    if not requests:
+        return []
+    t0 = len(requests[0].tokens)
+    sp0 = requests[0].sampling
+    if any(len(r.tokens) != t0 for r in requests):
+        raise ValueError(
+            "generate_batch needs one prompt length per batch (got "
+            f"{sorted({len(r.tokens) for r in requests})}); mixed-length "
+            "workloads belong on serving.Engine")
+    if any(r.sampling != sp0 for r in requests):
+        raise ValueError(
+            "generate_batch needs identical SamplingParams across the "
+            "batch; per-request sampling belongs on serving.Engine")
+    if sp0.eos_token >= 0:
+        raise ValueError(
+            "generate_batch ignores eos_token (the fixed batch runs to "
+            "its budget); requests that stop at eos belong on "
+            "serving.Engine")
+    prompts = jnp.asarray([r.tokens for r in requests], jnp.int32)
+    n_gen = max(r.max_new_tokens for r in requests)
+    key = (jax.random.key(sp0.seed) if sp0.temperature > 0 else None)
+    out = generate(model, params, prompts, n_gen, loop=loop,
+                   temperature=sp0.temperature, key=key)
+    return [out[i, :r.max_new_tokens].tolist()
+            for i, r in enumerate(requests)]
 
 
 def kv_cache_resident_bytes(cache) -> int:
@@ -234,6 +301,23 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy); every token "
                     "including the first is sampled, keyed by --seed")
+    ap.add_argument("--mode", choices=("batch", "engine"), default="batch",
+                    help="'batch' (default): one fixed-shape generate() "
+                    "call; 'engine': continuous batching on block-paged "
+                    "quantized KV pools — requests arrive on a Poisson "
+                    "trace, prefill into freshly allocated pages, and "
+                    "retire by releasing them (requires --kv-bits 8|2)")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="engine mode: concurrent decode slots")
+    ap.add_argument("--n-pages", type=int, default=64,
+                    help="engine mode: allocatable KV pages shared by all "
+                    "requests (page = kv_chunk tokens, every layer)")
+    ap.add_argument("--burst-steps", type=int, default=8,
+                    help="engine mode: decode steps per scheduling round "
+                    "(one jitted scan between admissions/retirements)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="engine mode: Poisson arrivals per scheduling "
+                    "round")
     ap.add_argument("--kv-bits", type=int, default=None,
                     help="KV-cache precision: 0 = activation dtype "
                     "(default), 8 = int8 codes + per-token scales, 2 = "
@@ -301,6 +385,35 @@ def main(argv=None):
         params = jax.jit(model.init)(jax.random.key(args.seed))
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
     prompts = corpus.sample(jax.random.key(1), args.batch, args.prompt_len)
+
+    if args.mode == "engine":
+        if not cfg.kv_bits:
+            ap.error("--mode engine pages *quantized* KV codes — pass "
+                     "--kv-bits 8 or --kv-bits 2")
+        reqs = [ServeRequest(
+            tokens=prompts[i].tolist(),
+            max_new_tokens=args.gen,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    seed=args.seed + i),
+        ) for i in range(args.batch)]
+        need = -(-(args.prompt_len + args.gen) // model.codec.page_tokens)
+        engine = Engine(model, params, max_slots=args.max_slots,
+                        n_pages=args.n_pages,
+                        max_pages_per_request=max(need, 1),
+                        burst_steps=args.burst_steps)
+        stats = run_trace(engine, poisson_trace(
+            reqs, rate=args.arrival_rate, seed=args.seed))
+        print(f"engine: {stats['n_requests']} requests, "
+              f"{stats['n_tokens']} tokens in {stats['wall_s']:.2f}s over "
+              f"{stats['rounds']} rounds "
+              f"({stats['sustained_tok_s']:.1f} sustained tok/s)")
+        print(f"latency: p50={stats['p50_latency_s']:.3f}s "
+              f"p99={stats['p99_latency_s']:.3f}s; "
+              f"free pages after drain: {engine.pools.free_pages()}"
+              f"/{args.n_pages}")
+        first = stats["outputs"][0]
+        print("sample:", first.tokens[:16])
+        return stats
 
     key = (jax.random.key(args.seed) if args.temperature > 0.0 else None)
     t0 = time.time()

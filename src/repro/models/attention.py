@@ -9,6 +9,7 @@ backward pass recomputes per-chunk scores instead of storing them.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -16,7 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantizer import dequantize_packed
-from repro.kernels.flash_decode.ops import flash_decode, mla_flash_decode
+from repro.kernels.flash_decode.ops import (flash_decode, mla_flash_decode,
+                                            paged_flash_decode,
+                                            paged_mla_flash_decode)
 from repro.kernels.quant_matmul.ops import (is_packed, mla_latent_weights,
                                             quant_matmul, quant_matmul_t)
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
@@ -276,45 +279,171 @@ def kv_log_decode(packed: jax.Array, scales: jax.Array, *, d: int,
     return (lut[c] * s_tok[..., None]).astype(dtype)
 
 
+# --------------------------------------------------------------- KV codecs
+#
+# One protocol for every KV-cache representation.  A codec owns three
+# things so the flat (B, S, ...) cache, the paged (n_pages, page, ...)
+# pools and the kernels can never drift on layout or rounding:
+#
+#   * ``encode``       — prefill-length tensor -> (codes, scales)
+#   * ``encode_token`` / ``append`` — one-token quantize (+ the kv2
+#     chunk-leader scale rule) and its flat-cache write
+#   * layout           — ``round_len`` (cache-length alignment, the old
+#     ``models.lm._cache_len``), ``code_cols``/``code_dtype``/
+#     ``scale_rows``/``scale_dtype`` (allocation shapes) and
+#     ``page_tokens`` (the paged-cache page size: one ``align`` group of
+#     tokens, so 2-bit scale groups never straddle pages)
+#
+# The legacy free functions (``kv_cache_quantize`` / ``kv_cache_update``)
+# survive as thin wrappers — call sites and tests keep working — but the
+# logic lives here once.
+
+
+@dataclasses.dataclass(frozen=True)
+class FpCodec:
+    """KV cache held in the activation dtype — no codes, no scales."""
+
+    kv_bits: int = 0
+    chunk: int = 1  # tokens per scale row (no scales: nominal)
+    align: int = 1  # cache-length alignment unit
+    quantized: bool = False
+
+    def round_len(self, s: int) -> int:
+        return s
+
+    def scale_rows(self, s: int) -> int:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Kv8Codec:
+    """int8 codes + per-(token, head) bf16 scales (``kv_quantize``)."""
+
+    align: int  # cfg.kv_chunk — tile/page alignment even though chunk=1
+    kv_bits: int = 8
+    chunk: int = 1
+    quantized: bool = True
+    code_dtype = jnp.int8
+    scale_dtype = jnp.bfloat16
+
+    def round_len(self, s: int) -> int:
+        return -(-s // self.align) * self.align
+
+    def scale_rows(self, s: int) -> int:
+        return s // self.chunk
+
+    def code_cols(self, d: int) -> int:
+        return d
+
+    @property
+    def page_tokens(self) -> int:
+        return self.align
+
+    def encode(self, x):
+        return kv_quantize(x)
+
+    def encode_token(self, x, pos, cur_scale):
+        """One token (B, 1, ..., D) -> (codes, scale row); ``pos`` and the
+        current scale are irrelevant at per-token granularity."""
+        del pos, cur_scale
+        return kv_quantize(x)
+
+    def append(self, codes, scales, x, pos):
+        q, sc = self.encode_token(x, pos, None)
+        codes = jax.lax.dynamic_update_slice_in_dim(codes, q, pos, 1)
+        scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, pos, 1)
+        return codes, scales
+
+
+@dataclasses.dataclass(frozen=True)
+class Kv2Codec:
+    """Packed LogQuant-style 2-bit codes + per-(chunk, head) log scales.
+
+    Chunk-leader rule: the token at a chunk boundary stamps the chunk's
+    scale from its own amax; later tokens in the chunk reuse it (their
+    overflow clips to the outer log level).  Revisiting the scale would
+    re-code earlier tokens — a full-cache rewrite per step, exactly the
+    traffic this cache layout removes."""
+
+    align: int  # cfg.kv_chunk == scale-group size == page size
+    kv_bits: int = 2
+    quantized: bool = True
+    code_dtype = jnp.uint32
+    scale_dtype = jnp.bfloat16
+
+    @property
+    def chunk(self) -> int:
+        return self.align
+
+    def round_len(self, s: int) -> int:
+        return -(-s // self.align) * self.align
+
+    def scale_rows(self, s: int) -> int:
+        return s // self.chunk
+
+    def code_cols(self, d: int) -> int:
+        return -(-d // 16)
+
+    @property
+    def page_tokens(self) -> int:
+        return self.align
+
+    def encode(self, x):
+        scales = kv_log_scales(x, self.chunk)
+        return kv_log_encode(x, scales, self.chunk), scales
+
+    def encode_token(self, x, pos, cur_scale):
+        """One token (B, 1, ..., D) against the current scale of its chunk
+        (shape (B, 1, ...)); ``pos`` may be a scalar (flat cache, shared
+        across the batch) or per-slot (B,) (paged cache)."""
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=-1)
+        lead = jnp.maximum(amax, 1e-8).astype(cur_scale.dtype)
+        stamp = jnp.reshape(pos % self.chunk == 0,
+                            (-1,) + (1,) * (cur_scale.ndim - 1))
+        sc = jnp.where(stamp, lead, cur_scale)
+        return kv_pack(_kv_log_codes(xf, sc)), sc
+
+    def append(self, codes, scales, x, pos):
+        ci = pos // self.chunk
+        cur = jax.lax.dynamic_slice_in_dim(scales, ci, 1, 1)
+        tok, sc = self.encode_token(x, pos, cur)
+        codes = jax.lax.dynamic_update_slice_in_dim(codes, tok, pos, 1)
+        scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, ci, 1)
+        return codes, scales
+
+
+@functools.lru_cache(maxsize=None)
+def kv_codec(kv_bits: int = 0, kv_chunk: int = 64):
+    """The codec for a (kv_bits, kv_chunk) cache config — cached so every
+    call site shares one instance per config."""
+    if kv_bits == 0:
+        return FpCodec()
+    if kv_bits == 8:
+        return Kv8Codec(align=kv_chunk)
+    if kv_bits == 2:
+        return Kv2Codec(align=kv_chunk)
+    raise ValueError(
+        f"kv_bits={kv_bits} is not supported — use 0 (KV cache in the "
+        "activation dtype), 8 (int8 codes + per-token-head scales) or 2 "
+        "(packed log codes + per-chunk scales)")
+
+
 def kv_cache_quantize(x: jax.Array, *, kv_bits: int,
                       chunk: int = 1) -> tuple[jax.Array, jax.Array]:
     """Quantize a prefill-length KV tensor into (codes, scales) as stored
-    in the cache: int8 per-token scales (kv_bits=8) or packed 2-bit codes
-    with per-chunk log scales (kv_bits=2)."""
-    if kv_bits == 8:
-        return kv_quantize(x)
-    assert kv_bits == 2, kv_bits
-    scales = kv_log_scales(x, chunk)
-    return kv_log_encode(x, scales, chunk), scales
+    in the cache — thin wrapper over :func:`kv_codec`'s ``encode``."""
+    return kv_codec(kv_bits, chunk if kv_bits == 2 else 64).encode(x)
 
 
 def kv_cache_update(codes: jax.Array, scales: jax.Array, x: jax.Array,
                     pos: jax.Array, *, kv_bits: int,
                     chunk: int = 1) -> tuple[jax.Array, jax.Array]:
     """Quantize one new token x: (B, 1, ..., D) and write it into the
-    (codes, scales) cache at ``pos`` — the decode append never leaves the
-    quantized domain.
-
-    kv_bits=2 chunk-leader rule: the token at a chunk boundary stamps the
-    chunk's scale from its own amax; later tokens in the chunk reuse it
-    (their overflow clips to the outer log level).  Revisiting the scale
-    would re-code earlier tokens — a full-cache rewrite per step, exactly
-    the traffic this cache layout removes."""
-    if kv_bits == 8:
-        q, sc = kv_quantize(x)
-        codes = jax.lax.dynamic_update_slice_in_dim(codes, q, pos, 1)
-        scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, pos, 1)
-        return codes, scales
-    assert kv_bits == 2, kv_bits
-    ci = pos // chunk
-    cur = jax.lax.dynamic_slice_in_dim(scales, ci, 1, 1)
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    lead = jnp.maximum(amax, 1e-8).astype(scales.dtype)
-    sc = jnp.where(pos % chunk == 0, lead, cur)
-    tok = kv_pack(_kv_log_codes(x.astype(jnp.float32), sc))
-    codes = jax.lax.dynamic_update_slice_in_dim(codes, tok, pos, 1)
-    scales = jax.lax.dynamic_update_slice_in_dim(scales, sc, ci, 1)
-    return codes, scales
+    (codes, scales) cache at ``pos`` — thin wrapper over :func:`kv_codec`'s
+    ``append``; the decode append never leaves the quantized domain."""
+    return kv_codec(kv_bits, chunk if kv_bits == 2 else 64).append(
+        codes, scales, x, pos)
 
 
 def _fd_mesh_args(ctx, batch: int) -> dict:
@@ -349,6 +478,52 @@ def decode_attention_quantized(q: jax.Array, k_codes: jax.Array,
                        kv_bits=kv_bits, chunk=chunk, dv=dh,
                        **_fd_mesh_args(ctx, b))
     return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def paged_decode_attention_quantized(q: jax.Array, k_pool: jax.Array,
+                                     ks_pool: jax.Array, v_pool: jax.Array,
+                                     vs_pool: jax.Array, page_tbl: jax.Array,
+                                     pos: jax.Array, *, kv_bits: int,
+                                     chunk: int = 1) -> jax.Array:
+    """Single-token GQA attention against block-paged quantized pools.
+
+    q: (B, 1, H, Dh) — one slot per engine request; k_pool/v_pool:
+    (n_pages, page, KV, w·) code pools, ks_pool/vs_pool:
+    (n_pages, page // chunk, KV) scale pools; page_tbl: (B, n_tiles) i32
+    per-slot page table (trash page 0 in unused entries); pos: (B,) i32
+    per-slot positions.  Same scale folding and (KV, G) grouping as
+    :func:`decode_attention_quantized`, so paged == flat stays bitwise at
+    a matched tile size (tile = page)."""
+    b, _, h, dh = q.shape
+    kv_heads = k_pool.shape[2]
+    g = h // kv_heads
+    qf = (q.astype(jnp.float32) * (dh ** -0.5)).reshape(b, kv_heads, g, dh)
+    out = paged_flash_decode(page_tbl, pos, qf, k_pool, ks_pool, v_pool,
+                             vs_pool, kv_bits=kv_bits, chunk=chunk, dv=dh,
+                             page=k_pool.shape[1])
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def kv_paged_append(codec, c_pool, s_pool, x, page_ids, pos, active):
+    """Quantize one new token per slot and scatter it into paged pools.
+
+    x: (B, 1, ..., D) new cache entries (time axis 1, same layout as the
+    flat ``append``); page_ids: (B,) i32 — the physical page holding each
+    slot's current tile; pos: (B,) i32 global positions; active: (B,)
+    bool.  Inactive slots are routed to the reserved trash page 0, so a
+    fixed-shape scatter needs no masking and never perturbs live pages.
+    The per-token quantization math is the codec's ``encode_token`` — the
+    same routine the flat cache appends with — so paged and flat caches
+    hold bit-identical codes for the same token stream."""
+    page = c_pool.shape[1]
+    row = (pos % page).astype(jnp.int32)
+    srow = row // codec.chunk
+    pid = jnp.where(active, page_ids, 0).astype(jnp.int32)
+    cur = s_pool[pid, srow][:, None]          # (B, 1, ...) current scales
+    tok, sc = codec.encode_token(x, pos, cur)
+    c_pool = c_pool.at[pid, row].set(tok[:, 0])
+    s_pool = s_pool.at[pid, srow].set(sc[:, 0])
+    return c_pool, s_pool
 
 
 # ------------------------------------------------------------------ GQA block
@@ -460,6 +635,53 @@ def apply_mla(p, cfg, x, positions, *, causal=True, kv_chunk=512, colsum=False):
     return (y, col) if colsum else y
 
 
+def _mla_q_and_expand(p, cfg, x, positions):
+    """Absorbed-MLA query projection shared by the flat and paged decode
+    paths: latent/rope queries plus the W_v expansion closure.
+
+    Pure code motion out of :func:`mla_decode` — both paths run the exact
+    same ops here, so per-request results stay bitwise identical between
+    the flat cache and the paged engine.  ``positions`` is whatever
+    ``apply_rope`` broadcasts against (..., T=1): ``pos[None]`` on the
+    flat path, per-slot ``pos[:, None]`` on the paged path."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    if "wq_a" in p:
+        ql = rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = linear(ql, p["wq_b"]).reshape(b, t, h, dn + dr)
+    else:
+        q = linear(x, p["wq"]).reshape(b, t, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    if is_packed(p["wkv_b"]):
+        pw_k, pw_v = mla_latent_weights(p["wkv_b"], h, dn, dv)
+
+        def absorb_k(qn):  # (B, 1, H, dn) -> (B, 1, H, kvr)
+            qh = qn.astype(jnp.float32)[:, 0].transpose(1, 0, 2)  # (H, B, dn)
+            lat = jax.vmap(quant_matmul_t)(qh, pw_k)  # (H, B, kvr)
+            return lat.transpose(1, 0, 2)[:, None]
+
+        def expand_v(cl):  # (B, 1, H, kvr) -> (B, 1, H, dv)
+            ch = cl[:, 0].transpose(1, 0, 2)  # (H, B, kvr)
+            out = jax.vmap(functools.partial(quant_matmul, shard=False))(
+                ch, pw_v)
+            return out.transpose(1, 0, 2)[:, None]
+    else:
+        wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
+        w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
+
+        def absorb_k(qn):  # (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
+            return jnp.einsum("bthd,khd->bthk", qn.astype(jnp.float32),
+                              w_k.astype(jnp.float32))
+
+        def expand_v(cl):
+            return jnp.einsum("bthk,khd->bthd", cl, w_v.astype(jnp.float32))
+
+    return absorb_k(q_nope), q_rope, expand_v
+
+
 def mla_decode(p, cfg, x, c_cache, rope_cache, pos, *, c_scale=None,
                r_scale=None, kv_bits: int = 0, chunk: int = 1, ctx=None):
     """Latent-space ("absorbed") MLA decode: the KV cache stores only the
@@ -488,38 +710,7 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos, *, c_scale=None,
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
-    if "wq_a" in p:
-        ql = rms_norm(linear(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
-        q = linear(ql, p["wq_b"]).reshape(b, 1, h, dn + dr)
-    else:
-        q = linear(x, p["wq"]).reshape(b, 1, h, dn + dr)
-    q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
-    if is_packed(p["wkv_b"]):
-        pw_k, pw_v = mla_latent_weights(p["wkv_b"], h, dn, dv)
-
-        def absorb_k(qn):  # (B, 1, H, dn) -> (B, 1, H, kvr)
-            qh = qn.astype(jnp.float32)[:, 0].transpose(1, 0, 2)  # (H, B, dn)
-            lat = jax.vmap(quant_matmul_t)(qh, pw_k)  # (H, B, kvr)
-            return lat.transpose(1, 0, 2)[:, None]
-
-        def expand_v(cl):  # (B, 1, H, kvr) -> (B, 1, H, dv)
-            ch = cl[:, 0].transpose(1, 0, 2)  # (H, B, kvr)
-            out = jax.vmap(functools.partial(quant_matmul, shard=False))(
-                ch, pw_v)
-            return out.transpose(1, 0, 2)[:, None]
-    else:
-        wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
-        w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
-
-        def absorb_k(qn):  # (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
-            return jnp.einsum("bthd,khd->bthk", qn.astype(jnp.float32),
-                              w_k.astype(jnp.float32))
-
-        def expand_v(cl):
-            return jnp.einsum("bthk,khd->bthd", cl, w_v.astype(jnp.float32))
-
-    q_lat = absorb_k(q_nope)
+    q_lat, q_rope, expand_v = _mla_q_and_expand(p, cfg, x, pos[None])
     scale = (dn + dr) ** -0.5
     if kv_bits in (8, 2):
         # quantized latent cache: fold the scale into the queries, attend
@@ -545,6 +736,32 @@ def mla_decode(p, cfg, x, c_cache, rope_cache, pos, *, c_scale=None,
     ctx = expand_v(ctx_lat)
     y = linear(ctx.reshape(b, 1, h * dv).astype(x.dtype), p["wo"])
     return y
+
+
+def mla_decode_paged(p, cfg, x, c_pool, cs_pool, r_pool, rs_pool, page_tbl,
+                     pos, *, kv_bits: int, chunk: int):
+    """Absorbed MLA decode against block-paged quantized latent pools.
+
+    x: (B, 1, D) — one slot per engine request; c_pool/r_pool:
+    (n_pages, page, w·) latent/rope code pools, cs_pool/rs_pool:
+    (n_pages, page // chunk) scale pools; page_tbl: (B, n_tiles) i32;
+    pos: (B,) i32 per-slot positions.  Query math is shared with
+    :func:`mla_decode` via :func:`_mla_q_and_expand` and the tile loop
+    with :func:`paged_mla_flash_decode`, so paged == flat per request."""
+    b, _, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q_lat, q_rope, expand_v = _mla_q_and_expand(p, cfg, x, pos[:, None])
+    scale = (dn + dr) ** -0.5
+    ql = (q_lat.astype(jnp.float32) * scale)[:, 0]
+    qr = (q_rope.astype(jnp.float32) * scale)[:, 0]
+    ctx_lat = paged_mla_flash_decode(
+        page_tbl, pos, ql, qr, c_pool, cs_pool, r_pool, rs_pool,
+        kv_bits=kv_bits, chunk=chunk, dl=kvr, dr=dr,
+        page=c_pool.shape[1])[:, None]          # (B, 1, H, kvr)
+    return linear(expand_v(ctx_lat).reshape(b, 1, h * dv).astype(x.dtype),
+                  p["wo"])
 
 
 # ------------------------------------------------------------- cross-attention

@@ -165,20 +165,20 @@ def apply_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None,
     # ones); only the FFN gathers full-T activations — see _gather_seq
     h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
     cache = {}
+    codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
     if meta.mixer == "attn":
         b, t, _ = h.shape
         q, k, v = att.gqa_qkv(p["mixer"], cfg, h, positions)
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
         mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
-        if cfg.kv_bits in (8, 2):
+        if codec.quantized:
             # prefill writes the cache already quantized — decode appends
             # stay quantized too, so codes+scales is the *only* cache
             # representation end-to-end (training/calib forwards discard
             # the cache and XLA dead-code-eliminates the quantize)
-            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
-            kq, ks = att.kv_cache_quantize(k, kv_bits=cfg.kv_bits, chunk=ch)
-            vq, vs = att.kv_cache_quantize(v, kv_bits=cfg.kv_bits, chunk=ch)
+            kq, ks = codec.encode(k)
+            vq, vs = codec.encode(v)
             cache = {"k": kq, "ks": ks, "v": vq, "vs": vs}
         else:
             cache = {"k": k, "v": v}
@@ -188,11 +188,9 @@ def apply_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None,
         out = att.flash_attention(q, k, v, causal=meta.causal,
                                   kv_chunk=min(512, t))
         mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
-        if cfg.kv_bits in (8, 2):
-            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
-            cq, cs = att.kv_cache_quantize(c_kv, kv_bits=cfg.kv_bits, chunk=ch)
-            rq, rs = att.kv_cache_quantize(k_rope, kv_bits=cfg.kv_bits,
-                                           chunk=ch)
+        if codec.quantized:
+            cq, cs = codec.encode(c_kv)
+            rq, rs = codec.encode(k_rope)
             cache = {"c": cq, "cs": cs, "r": rq, "rs": rs}
         else:
             cache = {"c": c_kv, "r": k_rope}
@@ -228,25 +226,23 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
                  ctx: ParallelCtx = LOCAL):
     """One-token step. x: (B, 1, D). Returns (x, new_cache)."""
     b = x.shape[0]
+    codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
     h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
     new_cache = dict(cache)
     if meta.mixer == "attn":
         q, k, v = att.gqa_qkv(p["mixer"], cfg, h, pos[None])
-        if cfg.kv_bits in (8, 2):
+        if codec.quantized:
             # quantized cache: append the new token's codes+scales and
             # attend directly on the codes (flash_decode dequantizes tile
             # by tile in-register) — no fp copy of the cache, ever; the
             # old path's per-step full-cache kv_dequantize was 3x the
             # fundamental decode HBM traffic per layer per token
-            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
-            kc, ks = att.kv_cache_update(cache["k"], cache["ks"], k, pos,
-                                         kv_bits=cfg.kv_bits, chunk=ch)
-            vc, vs = att.kv_cache_update(cache["v"], cache["vs"], v, pos,
-                                         kv_bits=cfg.kv_bits, chunk=ch)
+            kc, ks = codec.append(cache["k"], cache["ks"], k, pos)
+            vc, vs = codec.append(cache["v"], cache["vs"], v, pos)
             new_cache.update(k=kc, ks=ks, v=vc, vs=vs)
             out = att.decode_attention_quantized(
-                q, kc, ks, vc, vs, pos, kv_bits=cfg.kv_bits, chunk=ch,
-                ctx=ctx)
+                q, kc, ks, vc, vs, pos, kv_bits=codec.kv_bits,
+                chunk=codec.chunk, ctx=ctx)
         else:
             k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
@@ -255,15 +251,12 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
         mix = linear(out.reshape(b, 1, -1), p["mixer"]["wo"])
     elif meta.mixer == "mla":
         _, _, _, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, pos[None])
-        if cfg.kv_bits in (8, 2):
-            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
-            cc, cs = att.kv_cache_update(cache["c"], cache["cs"], c_kv, pos,
-                                         kv_bits=cfg.kv_bits, chunk=ch)
-            rc, rs = att.kv_cache_update(cache["r"], cache["rs"], k_rope, pos,
-                                         kv_bits=cfg.kv_bits, chunk=ch)
+        if codec.quantized:
+            cc, cs = codec.append(cache["c"], cache["cs"], c_kv, pos)
+            rc, rs = codec.append(cache["r"], cache["rs"], k_rope, pos)
             mix = att.mla_decode(p["mixer"], cfg, h, cc, rc, pos, c_scale=cs,
-                                 r_scale=rs, kv_bits=cfg.kv_bits, chunk=ch,
-                                 ctx=ctx)
+                                 r_scale=rs, kv_bits=codec.kv_bits,
+                                 chunk=codec.chunk, ctx=ctx)
             new_cache.update(c=cc, cs=cs, r=rc, rs=rs)
         else:
             c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c"], c_kv,
@@ -295,6 +288,65 @@ def decode_block(p, cfg, meta: BlockMeta, x, cache, pos,
                 ).reshape(b, t, -1)
         x = x + y
     return x, new_cache
+
+
+def paged_decode_block(p, cfg, meta: BlockMeta, x, pools, page_tbl, pos,
+                       active):
+    """One-token step against block-paged quantized pools (serving engine).
+
+    x: (B, 1, D) — one engine slot per row; pools: this block's shared
+    code/scale pools (no batch axis — pages are the unit of allocation);
+    page_tbl: (B, n_tiles) i32; pos: (B,) i32 per-slot positions; active:
+    (B,) bool.  Per-slot rope positions and the per-slot position mask in
+    the paged kernels are the only differences from :func:`decode_block` —
+    the projection/append/attention math is shared, so a slot's output is
+    bitwise the flat B=1 step at the same position.  Meshless by design
+    (the engine owns the batch axis)."""
+    b = x.shape[0]
+    codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    new_pools = dict(pools)
+    pid = page_tbl[jnp.arange(b), (pos // codec.page_tokens).astype(jnp.int32)]
+    if meta.mixer == "attn":
+        q, k, v = att.gqa_qkv(p["mixer"], cfg, h, pos[:, None])
+        kc, ks = att.kv_paged_append(codec, pools["k"], pools["ks"], k, pid,
+                                     pos, active)
+        vc, vs = att.kv_paged_append(codec, pools["v"], pools["vs"], v, pid,
+                                     pos, active)
+        new_pools.update(k=kc, ks=ks, v=vc, vs=vs)
+        out = att.paged_decode_attention_quantized(
+            q, kc, ks, vc, vs, page_tbl, pos, kv_bits=codec.kv_bits,
+            chunk=codec.chunk)
+        mix = linear(out.reshape(b, 1, -1), p["mixer"]["wo"])
+    elif meta.mixer == "mla":
+        _, _, _, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, pos[:, None])
+        cc, cs = att.kv_paged_append(codec, pools["c"], pools["cs"], c_kv,
+                                     pid, pos, active)
+        rc, rs = att.kv_paged_append(codec, pools["r"], pools["rs"], k_rope,
+                                     pid, pos, active)
+        new_pools.update(c=cc, cs=cs, r=rc, rs=rs)
+        mix = att.mla_decode_paged(p["mixer"], cfg, h, cc, cs, rc, rs,
+                                   page_tbl, pos, kv_bits=codec.kv_bits,
+                                   chunk=codec.chunk)
+    else:
+        raise NotImplementedError(
+            f"paged decode supports attn/mla mixers, got {meta.mixer!r} — "
+            "ssm/cross state is per-slot, not per-page; serve such models "
+            "through the flat generate() path")
+    x = x + mix
+    if meta.ffn != "none":
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if meta.ffn == "dense":
+            y = apply_dense_ffn(p["ffn"], h)
+        else:
+            y, _ = _routed_moe(p["ffn"], cfg, h, LOCAL)
+            if "shared" in p["ffn"]:
+                t = h.shape[1]
+                y = y + apply_dense_ffn(
+                    p["ffn"]["shared"], h.reshape(b * t, -1)
+                ).reshape(b, t, -1)
+        x = x + y
+    return x, new_pools
 
 
 def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
@@ -435,6 +487,10 @@ class Model:
         self.cfg = cfg
         self.ctx = ctx
         self.dtype = jnp.dtype(cfg.dtype)
+        # one codec instance owns every rounding/layout decision — flat
+        # cache, paged pools and serve-time capacity math all derive from
+        # it, so they cannot drift
+        self.codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
         metas = decoder_metas(cfg)
         self.prefix_metas = metas[: cfg.first_dense_layers]
         body = metas[cfg.first_dense_layers :]
@@ -572,13 +628,12 @@ class Model:
         return self.head_logits(params, x)
 
     def _cache_len(self, s: int) -> int:
-        """Allocated cache length: quantized caches round up to a
-        ``kv_chunk`` multiple so flash_decode always has an aligned
-        sequence tile (scale rows stay whole; the tail is position-masked)."""
-        if self.cfg.kv_bits in (8, 2):
-            ch = self.cfg.kv_chunk
-            return -(-s // ch) * ch
-        return s
+        """Allocated cache length — the codec's ``round_len``: quantized
+        caches round up to a ``kv_chunk`` multiple so flash_decode always
+        has an aligned sequence tile (scale rows stay whole; the tail is
+        position-masked).  Pages use the same rounding (page = kv_chunk),
+        so flat-cache and page-capacity math share one source of truth."""
+        return self.codec.round_len(s)
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, media=None, frames=None,
@@ -596,15 +651,15 @@ class Model:
 
         def pad_entry(c):
             # only sequence-indexed entries (self-attn KV, MLA latents) grow;
-            # quantized caches also carry scale rows — per token for kv8,
-            # per kv_chunk for kv2 (s is already a chunk multiple)
-            ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
+            # quantized caches also carry scale rows — the codec's
+            # ``scale_rows`` (s is already a chunk multiple)
+            codec = self.codec
 
             def f(key, a):
                 if key in ("k", "v", "c", "r"):
                     tgt = s
                 elif key in ("ks", "vs", "cs", "rs"):
-                    tgt = s // ch
+                    tgt = codec.scale_rows(s)
                 else:
                     return a
                 pad = [(0, 0)] * a.ndim
@@ -643,16 +698,14 @@ class Model:
         kvh, dh = cfg.n_kv_heads, cfg.head_dim
         dt = self.dtype
         cache_len = self._cache_len(cache_len)
-        ch = cfg.kv_chunk if cfg.kv_bits == 2 else 1
-        n_sc = cache_len // ch  # scale rows of a quantized cache
+        codec = self.codec
 
         def qkv_entry(d: int):
             """(codes, scales) zero pair for one quantized cache tensor of
-            feature width d (head axes supplied by the caller)."""
-            if cfg.kv_bits == 8:
-                return ((cache_len, d), jnp.int8), ((cache_len,), jnp.bfloat16)
-            return ((cache_len, -(-d // 16)), jnp.uint32), (
-                (n_sc,), jnp.bfloat16)
+            feature width d (head axes supplied by the caller) — widths,
+            dtypes and scale-row counts all come from the codec layout."""
+            return (((cache_len, codec.code_cols(d)), codec.code_dtype),
+                    ((codec.scale_rows(cache_len),), codec.scale_dtype))
 
         def entry(meta: BlockMeta):
             c = {}
@@ -735,6 +788,44 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self.head_logits(params, x[:, 0])
         return logits, new_cache
+
+    def paged_decode_step(self, params, pools, page_tbl, token, pos, active):
+        """One decode step for every engine slot against paged pools.
+
+        token: (B, 1) int32; page_tbl: (B, n_tiles) int32; pos/active:
+        (B,) per-slot positions and liveness.  Returns
+        (logits (B, V), pools) — the same group-scan schedule as
+        :func:`decode_step`, with the ONE page table shared by every
+        layer (all layers of a request occupy the same logical tiles;
+        each layer owns its pools)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"], token).astype(self.dtype)
+        new_pools = dict(pools)
+        if "prefix" in pools:
+            new_prefix = []
+            for p_blk, meta, c in zip(params["prefix"], self.prefix_metas,
+                                      pools["prefix"]):
+                x, c2 = paged_decode_block(p_blk, cfg, meta, x, c, page_tbl,
+                                           pos, active)
+                new_prefix.append(c2)
+            new_pools["prefix"] = new_prefix
+
+        def body(x, xs):
+            gp, gc = xs
+            new_gc = {}
+            for i in range(self.period):
+                x, c2 = paged_decode_block(gp[f"b{i}"], cfg,
+                                           self.group_metas[i], x,
+                                           gc[f"b{i}"], page_tbl, pos, active)
+                new_gc[f"b{i}"] = c2
+            return x, new_gc
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               pools["groups"]))
+        new_pools["groups"] = new_groups
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.head_logits(params, x[:, 0])
+        return logits, new_pools
 
 
 def build_model(cfg: ModelConfig, ctx: ParallelCtx = LOCAL) -> Model:

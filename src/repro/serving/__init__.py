@@ -1,0 +1,8 @@
+from repro.serving.engine import (  # noqa: F401
+    Engine,
+    RequestOutput,
+    SamplingParams,
+    ServeRequest,
+)
+from repro.serving.paged import PagedPools  # noqa: F401
+from repro.serving.trace import poisson_trace, run_trace  # noqa: F401

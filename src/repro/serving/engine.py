@@ -1,0 +1,315 @@
+"""Continuous-batching serve engine over block-paged quantized KV pools.
+
+Requests arrive (``submit``), prefill into freshly allocated pages, join
+the running decode batch at the next scheduling round (``step``), and
+retire as soon as they hit EOS or their token budget — releasing their
+pages for the next admission.  Decode runs in *bursts*: a jitted
+``lax.scan`` of ``burst_steps`` paged decode steps whose carry holds every
+slot's token / position / emitted-count / liveness, so the host only
+intervenes at scheduling rounds, exactly like the fixed-batch scan loop
+of ``launch.serve``.
+
+Determinism contract (pinned by tests/test_serving.py): a request's
+tokens are bitwise the ones ``launch.serve.generate`` produces for the
+same prompt alone at batch 1 with the same ``SamplingParams`` — the
+engine replicates its sampling stream exactly (token ``j`` is drawn with
+``fold_in(key(seed), j)``; token 0 comes from the prefill logits) and the
+paged attention matches the flat cache bitwise at tile = page.  The one
+structural exception is MoE models, where expert-capacity dropping
+couples tokens across the batch (true of any batched serving, the
+fixed-batch loop included).
+
+Admission policy: pages for the *whole* request (prompt + max_new_tokens,
+rounded up to whole pages) are reserved at admission — a running request
+can never hit the allocator mid-flight, so there is no preemption/swap
+path to get wrong.  Admission is whole-prompt (one prefill dispatch per
+request, like the flat path — bit-identity is the reason chunked
+admission is not the default).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.paged import PagedPools
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling: greedy at ``temperature == 0``, categorical
+    over ``logits / temperature`` otherwise, keyed by ``seed`` (the same
+    stream ``launch.serve.generate`` draws for ``key(seed)``).
+    ``eos_token`` stops generation early when sampled (-1: never)."""
+    temperature: float = 0.0
+    seed: int = 0
+    eos_token: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One generation request: prompt token ids + a token budget + its
+    sampling params.  The single request type shared by the engine, the
+    CLI and ``generate_batch``."""
+    tokens: tuple
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+
+    def __post_init__(self):
+        object.__setattr__(self, "tokens", tuple(int(t) for t in self.tokens))
+        if not self.tokens:
+            raise ValueError("ServeRequest needs at least one prompt token")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    request_id: int
+    tokens: list
+    prompt_len: int
+    submit_time: float
+    finish_time: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.submit_time
+
+
+@functools.lru_cache(maxsize=64)
+def _prefill_fn(model, cache_len: int):
+    return jax.jit(lambda p, x: model.prefill(p, x, cache_len=cache_len))
+
+
+@functools.lru_cache(maxsize=16)
+def _burst_fn(model, n_steps: int):
+    """One jitted program for a scheduling round: ``n_steps`` paged decode
+    steps with per-slot sampling state in the scan carry, pools donated.
+
+    Emits ``(toks, emitted)`` per step; slots deactivate in-carry on EOS /
+    budget so a retired-mid-burst slot stops emitting (and its appends
+    divert to the trash page) without any host round-trip."""
+
+    def run(params, pools, tbl, tok, pos, nem, act, temp, seeds, eos,
+            max_new):
+        keys = jax.vmap(jax.random.key)(seeds)
+        safe_temp = jnp.where(temp > 0, temp, 1.0)
+
+        def sample_one(key, nem_i, logits_i, temp_i):
+            sub = jax.random.fold_in(key, nem_i)
+            return jax.random.categorical(
+                sub, logits_i[None] / temp_i, axis=-1).astype(jnp.int32)[0]
+
+        def body(carry, _):
+            pools, tok, pos, nem, act = carry
+            logits, pools = model.paged_decode_step(params, pools, tbl, tok,
+                                                    pos, act)
+            sampled = jax.vmap(sample_one)(keys, nem, logits, safe_temp)
+            greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+            nxt = jnp.where(temp > 0, sampled, greedy)
+            emitted = act
+            nem2 = nem + act.astype(jnp.int32)
+            done = act & ((nxt == eos) | (nem2 >= max_new))
+            return (pools, nxt[:, None], pos + act.astype(jnp.int32), nem2,
+                    act & ~done), (jnp.where(act, nxt, -1), emitted)
+
+        (pools, tok, pos, nem, act), (toks, em) = jax.lax.scan(
+            body, (pools, tok, pos, nem, act), None, length=n_steps)
+        return pools, tok, pos, nem, act, toks, em
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+class Engine:
+    """Continuous-batching engine: ``submit()`` requests, drive scheduling
+    rounds with ``step()`` (or ``drain()`` to completion); each round
+    retires finished requests, admits queued ones into free slots, and
+    runs one decode burst for every live slot at once."""
+
+    def __init__(self, model, params, *, max_slots: int = 4,
+                 n_pages: int = 64, max_pages_per_request: int = 8,
+                 burst_steps: int = 8):
+        cfg = model.cfg
+        metas = tuple(model.prefix_metas) + tuple(model.group_metas)
+        bad = sorted({m.mixer for m in metas} - {"attn", "mla"})
+        if bad:
+            raise ValueError(
+                f"paged serving supports attn/mla mixers, model has {bad} "
+                "— ssm/cross-attention state is per-slot, not per-page; "
+                "serve such models through launch.serve.generate")
+        if any(m.has_cross for m in metas) or cfg.family == "encdec":
+            raise ValueError(
+                "paged serving does not support cross-attention caches "
+                "(media/encoder KV is request-global, not paged); use "
+                "launch.serve.generate")
+        if getattr(model.ctx, "enabled", False):
+            raise ValueError(
+                "the engine is meshless — it owns the batch axis and the "
+                "paged kernels take no shard_map route; build the model "
+                "with the LOCAL ctx for serving")
+        self.model = model
+        self.params = params
+        self.pools = PagedPools(model, n_pages)  # validates kv_bits
+        self.page = self.pools.page
+        self.max_slots = max_slots
+        self.max_pages = max_pages_per_request
+        self.burst_steps = burst_steps
+
+        # per-slot scheduling state lives on the HOST: admission writes a
+        # handful of scalars per request, and as numpy rows that is free —
+        # as device arrays it was ~10 tiny dispatches per admission, a
+        # measurable slice of small-model serving time.  The burst uploads
+        # the (tiny) state with its dispatch and the results mirror back.
+        b = max_slots
+        self.tbl = np.zeros((b, self.max_pages), np.int32)
+        self.tok = np.zeros((b, 1), np.int32)
+        self.pos = np.zeros((b,), np.int32)
+        self.nem = np.zeros((b,), np.int32)
+        self.act = np.zeros((b,), bool)
+        self.temp = np.zeros((b,), np.float32)
+        self.seeds = np.zeros((b,), np.uint32)
+        self.eos = np.full((b,), -1, np.int32)
+        self.max_new = np.ones((b,), np.int32)
+
+        self._queue = collections.deque()
+        self._next_rid = 0
+        self._slot_rid = [None] * b          # rid occupying each slot
+        self._slot_pages = [None] * b        # np page ids of each slot
+        self._slot_tokens = [None] * b       # emitted tokens (host)
+        self._slot_req = [None] * b
+        self._submit_time = {}
+        self._outputs = []
+
+    # ------------------------------------------------------------------ API
+    def submit(self, request: ServeRequest) -> int:
+        """Queue a request; returns its id.  Admission happens at the next
+        ``step()``.  Requests that can never fit are rejected here."""
+        need = self._pages_for(request)
+        if need > self.max_pages:
+            raise ValueError(
+                f"request needs {need} pages ({len(request.tokens)} prompt "
+                f"+ {request.max_new_tokens} new tokens at {self.page}/page)"
+                f" but the page table holds {self.max_pages} per request — "
+                "raise max_pages_per_request or split the request")
+        if need > self.pools.n_pages:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.pools.n_pages} — raise n_pages")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, request))
+        self._submit_time[rid] = time.time()
+        return rid
+
+    def step(self) -> list:
+        """One scheduling round: admit queued requests into free slots,
+        run one decode burst over the live batch, retire the finished.
+        Returns the requests that finished this round."""
+        self._admit()
+        if self.act.any():
+            self._burst()
+        return self._retire()
+
+    def drain(self) -> list:
+        """Run ``step()`` until every submitted request has finished."""
+        out = []
+        while self._queue or self.act.any():
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------ internals
+    def _pages_for(self, req: ServeRequest) -> int:
+        return -(-(len(req.tokens) + req.max_new_tokens) // self.page)
+
+    def _admit(self) -> None:
+        while self._queue:
+            slot = next((s for s in range(self.max_slots)
+                         if self._slot_rid[s] is None), None)
+            if slot is None:
+                return
+            rid, req = self._queue[0]
+            need = self._pages_for(req)
+            if need > self.pools.free_pages():
+                if any(r is not None for r in self._slot_rid):
+                    return  # wait for a retirement to free pages
+                # empty engine and still no room: raise the actionable
+                # exhaustion error (pool is simply too small)
+                self.pools.alloc(need, context=f" (request {rid})")
+            self._queue.popleft()
+            ids = self.pools.alloc(need, context=f" (request {rid})")
+            self._start(slot, rid, req, ids)
+
+    def _start(self, slot: int, rid: int, req: ServeRequest, ids) -> None:
+        t = len(req.tokens)
+        sp = req.sampling
+        prompt = jnp.asarray(req.tokens, jnp.int32)[None]
+        logits, cache = _prefill_fn(self.model, t)(self.params, prompt)
+        n_pp = -(-self.model._cache_len(t) // self.page)
+        self.pools.write_prefill(cache, ids[:n_pp])
+        # token 0 from the prefill logits — the exact draw generate() makes
+        key = jax.random.key(sp.seed)
+        if sp.temperature > 0:
+            tok0 = int(jax.random.categorical(
+                jax.random.fold_in(key, 0),
+                logits / jnp.float32(sp.temperature), axis=-1)[0])
+        else:
+            tok0 = int(jnp.argmax(logits, -1)[0])
+        ids_np = np.asarray(ids)
+        self._slot_rid[slot] = rid
+        self._slot_pages[slot] = ids_np
+        self._slot_tokens[slot] = [tok0]
+        self._slot_req[slot] = req
+        done0 = (req.max_new_tokens == 1 or tok0 == sp.eos_token)
+        self.tbl[slot] = 0
+        self.tbl[slot, :len(ids_np)] = ids_np
+        self.tok[slot, 0] = tok0
+        self.pos[slot] = t
+        self.nem[slot] = 1
+        self.act[slot] = not done0
+        self.temp[slot] = sp.temperature
+        self.seeds[slot] = np.uint32(sp.seed & 0xFFFFFFFF)
+        self.eos[slot] = sp.eos_token
+        self.max_new[slot] = req.max_new_tokens
+
+    def _burst(self) -> None:
+        (self.pools.pools, tok, pos, nem, act,
+         toks, em) = _burst_fn(self.model, self.burst_steps)(
+            self.params, self.pools.pools, self.tbl, self.tok, self.pos,
+            self.nem, self.act, self.temp, self.seeds, self.eos,
+            self.max_new)
+        # np.array, not np.asarray: admission mutates these rows in place
+        self.tok, self.pos = np.array(tok), np.array(pos)
+        self.nem, self.act = np.array(nem), np.array(act)
+        toks, em = np.asarray(toks), np.asarray(em)
+        for s in range(self.max_slots):
+            if self._slot_rid[s] is None:
+                continue
+            self._slot_tokens[s].extend(int(t)
+                                        for t in toks[em[:, s], s])
+
+    def _retire(self) -> list:
+        finished = []
+        for s in range(self.max_slots):
+            rid = self._slot_rid[s]
+            if rid is None or self.act[s]:
+                continue
+            self.pools.release(self._slot_pages[s])
+            req = self._slot_req[s]
+            out = RequestOutput(
+                request_id=rid,
+                tokens=self._slot_tokens[s][:req.max_new_tokens],
+                prompt_len=len(req.tokens),
+                submit_time=self._submit_time.pop(rid),
+                finish_time=time.time())
+            finished.append(out)
+            self._outputs.append(out)
+            self._slot_rid[s] = self._slot_pages[s] = None
+            self._slot_tokens[s] = self._slot_req[s] = None
+        return finished

@@ -1,0 +1,376 @@
+"""Continuous-batching serve engine on block-paged quantized KV (PR 8).
+
+The engine's contract is *bit-identity*: a request's tokens are bitwise
+the tokens ``launch.serve.generate`` produces for that prompt alone at
+batch 1 with the same ``SamplingParams``, regardless of what shares the
+batch — pinned here across GQA/MLA × kv8/kv2, heterogeneous budgets and
+temperatures, page reuse after retirement (stale page contents must not
+perturb later requests), and the paged kernels' tile-indirect loop
+against the flat kernels at partial-tile positions.  The paged path must
+also never materialize an fp copy of the cache (codes+scales end to
+end), and the page allocator must fail actionably, not opaquely.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticCorpus
+from repro.launch.serve import generate, generate_batch
+from repro.models import attention as att
+from repro.models import build_model
+from repro.serving import (Engine, PagedPools, SamplingParams, ServeRequest,
+                           poisson_trace, run_trace)
+from repro.serving.paged import PageAllocatorExhausted
+
+PAIRS = [("qwen1.5-4b", 8), ("qwen1.5-4b", 2),
+         ("deepseek-v2-236b", 8), ("deepseek-v2-236b", 2)]
+
+
+@functools.lru_cache(maxsize=None)
+def _model_params(name, kv_bits):
+    # capacity_factor=100: MoE capacity dropping couples tokens across a
+    # batch (true of any batched serving) — lift it so deepseek's streams
+    # are batch-composition-independent and bit-identity is testable.
+    cfg = dataclasses.replace(get_config(name).reduced(), dtype="float32",
+                              capacity_factor=100.0, kv_bits=kv_bits)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    return model, params
+
+
+def _prompts(model, n, t):
+    corpus = SyntheticCorpus(vocab_size=model.cfg.vocab_size, seed=0)
+    return corpus.sample(jax.random.key(2), n, t)
+
+
+def _baseline(model, params, prompt, n_gen, sp):
+    """The single-request batch-1 reference stream for one request."""
+    key = jax.random.key(sp.seed) if sp.temperature > 0 else None
+    out = generate(model, params, jnp.asarray(prompt, jnp.int32)[None],
+                   n_gen, temperature=sp.temperature, key=key)
+    return out[0].tolist()
+
+
+@pytest.mark.parametrize("name,kv_bits", PAIRS)
+def test_engine_bit_identical_to_single_request(name, kv_bits):
+    """Heterogeneous budgets + sampling params over fewer slots than
+    requests (forces queueing + admission mid-flight): every request's
+    tokens must match its solo batch-1 ``generate`` stream bitwise, and
+    every page must come back after the drain.  Prompt 60 + budgets up
+    to 12 push every request past the 64-token page boundary, so the
+    paged kernel walks a 2-entry page table mid-stream — the identity
+    must survive the second-page indirection, not just page 0."""
+    model, params = _model_params(name, kv_bits)
+    prompts = _prompts(model, 3, 60)
+    sps = [SamplingParams(), SamplingParams(),
+           SamplingParams(temperature=1.3, seed=7)]
+    budgets = [12, 9, 7]
+    expected = [_baseline(model, params, prompts[i].tolist(), budgets[i],
+                          sps[i])
+                for i in range(3)]
+
+    engine = Engine(model, params, max_slots=2, n_pages=16,
+                    max_pages_per_request=2, burst_steps=4)
+    rids = [engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                       max_new_tokens=budgets[i],
+                                       sampling=sps[i]))
+            for i in range(3)]
+    outs = {o.request_id: o for o in engine.drain()}
+    assert sorted(outs) == sorted(rids)
+    for i, rid in enumerate(rids):
+        assert outs[rid].tokens == expected[i], \
+            f"request {i}: {outs[rid].tokens} != {expected[i]}"
+        assert outs[rid].prompt_len == 60
+    assert engine.pools.free_pages() == 16, "pages leaked after drain"
+
+
+def test_engine_eos_early_stop():
+    """A request stops at its eos token (inclusive) and retires early,
+    releasing pages while other requests keep decoding."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    prompts = _prompts(model, 2, 12)
+    full = _baseline(model, params, prompts[0].tolist(), 10,
+                     SamplingParams())
+    eos = full[4]
+    cut = full.index(eos) + 1  # first occurrence (may precede slot 4)
+    engine = Engine(model, params, max_slots=2, n_pages=8,
+                    max_pages_per_request=1, burst_steps=3)
+    r0 = engine.submit(ServeRequest(
+        tokens=prompts[0].tolist(), max_new_tokens=10,
+        sampling=SamplingParams(eos_token=eos)))
+    r1 = engine.submit(ServeRequest(tokens=prompts[1].tolist(),
+                                    max_new_tokens=10))
+    outs = {o.request_id: o for o in engine.drain()}
+    assert outs[r0].tokens == full[:cut]
+    assert outs[r1].tokens == _baseline(model, params, prompts[1].tolist(),
+                                        10, SamplingParams())
+
+
+def test_page_reuse_after_retirement():
+    """The allocator is LIFO (freshly retired pages are reused first) and
+    stale page contents from a drained batch must not perturb the next
+    one — pages are reused without any zeroing."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    pools = PagedPools(model, 8)
+    a = pools.alloc(3)
+    assert pools.free_pages() == 5
+    pools.release(a)
+    assert pools.free_pages() == 8
+    b = pools.alloc(3)
+    assert b.tolist() == a.tolist(), "retired pages are not reused first"
+    pools.release(b)
+
+    # engine-level: second wave decodes on pages the first wave dirtied
+    prompts = _prompts(model, 4, 12)
+    engine = Engine(model, params, max_slots=2, n_pages=2,
+                    max_pages_per_request=1, burst_steps=4)
+    for i in range(2):
+        engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                   max_new_tokens=6))
+    engine.drain()
+    assert engine.pools.free_pages() == 2
+    rids = [engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                       max_new_tokens=6))
+            for i in (2, 3)]
+    outs = {o.request_id: o for o in engine.drain()}
+    for i, rid in zip((2, 3), rids):
+        assert outs[rid].tokens == _baseline(
+            model, params, prompts[i].tolist(), 6, SamplingParams()), \
+            "stale page contents leaked into a reused page's stream"
+
+
+def test_allocator_exhaustion_is_actionable():
+    model, params = _model_params("qwen1.5-4b", 8)
+    pools = PagedPools(model, 4)
+    with pytest.raises(PageAllocatorExhausted, match="need 5 pages"):
+        pools.alloc(5)
+    with pytest.raises(PageAllocatorExhausted, match="Retire requests"):
+        pools.alloc(5)
+
+    engine = Engine(model, params, max_slots=2, n_pages=4,
+                    max_pages_per_request=2, burst_steps=2)
+    page = engine.page
+    big = ServeRequest(tokens=list(range(2 * page)), max_new_tokens=page)
+    with pytest.raises(ValueError, match="max_pages_per_request"):
+        engine.submit(big)
+    wide = Engine(model, params, max_slots=2, n_pages=2,
+                  max_pages_per_request=8, burst_steps=2)
+    with pytest.raises(ValueError, match="raise n_pages"):
+        wide.submit(big)
+
+    # kv_bits=0 has no code/scale layout to page
+    fp_model, _ = _model_params("qwen1.5-4b", 0)
+    with pytest.raises(ValueError, match="kv_bits=8 or kv_bits=2"):
+        PagedPools(fp_model, 4)
+
+
+@pytest.mark.parametrize("kv_bits", [8, 2])
+def test_paged_path_never_materializes_fp_cache(kv_bits, monkeypatch):
+    """Codes+scales are the paged cache's only representation: a full
+    engine run (prefill scatter + burst decode + retire) must never call
+    the fp cache decoders."""
+    model, params = _model_params("qwen1.5-4b", kv_bits)
+    prompts = _prompts(model, 2, 12)
+
+    def boom(*a, **k):
+        raise AssertionError("paged serving materialized an fp KV cache")
+
+    monkeypatch.setattr(att, "kv_dequantize", boom)
+    monkeypatch.setattr(att, "kv_log_decode", boom)
+    engine = Engine(model, params, max_slots=2, n_pages=4,
+                    max_pages_per_request=1, burst_steps=4)
+    for i in range(2):
+        engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                   max_new_tokens=6))
+    outs = engine.drain()
+    assert len(outs) == 2 and all(len(o.tokens) == 6 for o in outs)
+
+
+def test_engine_rejects_unpageable_models():
+    """SSM state is per-slot, not per-page: jamba must be rejected with a
+    pointer at the flat path, not fail deep in the paged kernels."""
+    cfg = dataclasses.replace(get_config("jamba-v0.1-52b").reduced(),
+                              dtype="float32", kv_bits=8)
+    model = build_model(cfg)
+    with pytest.raises(ValueError, match="launch.serve.generate"):
+        Engine(model, jax.jit(model.init)(jax.random.key(0)), n_pages=4)
+
+
+def test_poisson_trace_driver():
+    """Arrivals land at their scheduled rounds and the driver reports the
+    sustained-throughput/latency summary the bench leg records."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    prompts = _prompts(model, 4, 12)
+    reqs = [ServeRequest(tokens=prompts[i].tolist(), max_new_tokens=4)
+            for i in range(4)]
+    trace = poisson_trace(reqs, rate=2.0, seed=3)
+    assert [e.step for e in trace] == sorted(e.step for e in trace)
+    engine = Engine(model, params, max_slots=2, n_pages=8,
+                    max_pages_per_request=1, burst_steps=2)
+    stats = run_trace(engine, trace)
+    assert stats["n_requests"] == 4
+    assert stats["n_tokens"] == 16
+    assert stats["sustained_tok_s"] > 0
+    assert stats["p99_latency_s"] >= stats["p50_latency_s"] >= 0
+    assert engine.pools.free_pages() == 8
+
+
+def test_generate_batch_wraps_generate():
+    """The request-typed wrapper returns per-request truncations of the
+    fixed-batch stream and rejects what only the engine can serve."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    prompts = _prompts(model, 2, 12)
+    sp = SamplingParams(temperature=0.9, seed=3)
+    reqs = [ServeRequest(tokens=prompts[i].tolist(), max_new_tokens=n,
+                         sampling=sp) for i, n in enumerate((4, 6))]
+    out = generate_batch(model, params, reqs)
+    ref = generate(model, params, prompts, 6, temperature=0.9,
+                   key=jax.random.key(3))
+    assert out[0] == ref[0, :4].tolist()
+    assert out[1] == ref[1].tolist()
+    assert generate_batch(model, params, []) == []
+
+    mixed_len = [reqs[0], dataclasses.replace(reqs[1],
+                                              tokens=prompts[1][:8])]
+    with pytest.raises(ValueError, match="one prompt length"):
+        generate_batch(model, params, mixed_len)
+    mixed_sp = [reqs[0], dataclasses.replace(
+        reqs[1], sampling=SamplingParams(temperature=0.5))]
+    with pytest.raises(ValueError, match="identical SamplingParams"):
+        generate_batch(model, params, mixed_sp)
+    eos = [dataclasses.replace(r, sampling=SamplingParams(eos_token=3))
+           for r in reqs]
+    with pytest.raises(ValueError, match="serving.Engine"):
+        generate_batch(model, params, eos)
+
+
+# ------------------------------------------------- paged kernels vs flat
+
+
+def _gqa_pool_case(kv_bits):
+    """Random flat GQA cache + the same codes scattered into shuffled
+    pages: flat (B, S, KV, ·) caches vs (n_pages, page, KV, ·) pools with
+    per-request page tables and partial-tile positions."""
+    page, b, kv, g, dh = 64, 2, 2, 2, 16
+    s = 2 * page
+    codec = att.kv_codec(kv_bits, page)
+    key = jax.random.key(5)
+    kx, vx, qx = (jax.random.normal(k, shp, jnp.float32) for k, shp in zip(
+        jax.random.split(key, 3),
+        [(b, s, kv, dh), (b, s, kv, dh), (b, kv, g, dh)]))
+    kq, ks = codec.encode(kx)
+    vq, vs = codec.encode(vx)
+    # request 0 -> pages [3, 1]; request 1 -> pages [4, 2] (+ trash 0)
+    tbl = np.array([[3, 1], [4, 2]], np.int32)
+    n_pages = 5
+
+    def pool(codes, scales):
+        cp = jnp.zeros((n_pages,) + (page,) + codes.shape[2:], codes.dtype)
+        sp = jnp.zeros((n_pages, page // codec.chunk) + scales.shape[2:],
+                       scales.dtype)
+        for bb in range(b):
+            for t in range(2):
+                pid = int(tbl[bb, t])
+                cp = cp.at[pid].set(codes[bb, t * page:(t + 1) * page])
+                sr = page // codec.chunk
+                sp = sp.at[pid].set(scales[bb, t * sr:(t + 1) * sr])
+        return cp, sp
+
+    kqp, ksp = pool(kq, ks)
+    vqp, vsp = pool(vq, vs)
+    pos = np.array([70, 35], np.int32)  # both tiles partial for b=1
+    tbl = jnp.asarray(tbl).at[1, 1].set(0)  # b=1 tile 1: trash page
+    return codec, qx, (kq, ks, vq, vs), (kqp, ksp, vqp, vsp), tbl, pos, dh
+
+
+@pytest.mark.parametrize("kv_bits", [8, 2])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_paged_gqa_matches_flat_bitwise(kv_bits, use_kernel):
+    """The page-table-indirect tile loop is the flat kernel's loop with an
+    indirection: same codes at tile = page -> bitwise-identical output per
+    request, with partial trailing tiles and a trash-page table entry in
+    play.  The flat call is pinned to ``s_blk = page`` (its dispatch may
+    pick a larger tile, which reorders the streaming-softmax rescales by
+    an ulp) and run at the full batch shape per request pos (the flat
+    kernels share one pos across the batch)."""
+    from repro.kernels.flash_decode import (flash_decode_pallas,
+                                            flash_decode_ref,
+                                            paged_flash_decode)
+
+    codec, q, flat, pools, tbl, pos, dh = _gqa_pool_case(kv_bits)
+    paged = paged_flash_decode(tbl, pos, q, *pools, kv_bits=kv_bits,
+                               chunk=codec.chunk, dv=dh, page=64,
+                               use_kernel=use_kernel)
+    for bb in range(2):
+        px = jnp.full((1, 1), pos[bb], jnp.int32)
+        if use_kernel:
+            acc, _, l = flash_decode_pallas(
+                q, *flat, px, kv_bits=kv_bits, chunk=codec.chunk, dh=dh,
+                dv=dh, s_blk=64, interpret=True)
+        else:
+            acc, _, l = flash_decode_ref(
+                q, *flat, px, kv_bits=kv_bits, chunk=codec.chunk, dh=dh,
+                dv=dh, s_blk=64)
+        ref = acc / jnp.maximum(l, 1e-30)
+        assert jnp.array_equal(paged[bb], ref[bb]), \
+            f"request {bb} not bitwise equal (kernel={use_kernel})"
+
+
+@pytest.mark.parametrize("kv_bits", [8, 2])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_paged_mla_matches_flat_bitwise(kv_bits, use_kernel):
+    from repro.kernels.flash_decode import (mla_flash_decode_pallas,
+                                            mla_flash_decode_ref,
+                                            paged_mla_flash_decode)
+
+    page, b, h, dl, dr = 64, 2, 2, 32, 16
+    s = 2 * page
+    codec = att.kv_codec(kv_bits, page)
+    key = jax.random.key(9)
+    cx, rx, qlx, qrx = (jax.random.normal(k, shp, jnp.float32)
+                        for k, shp in zip(jax.random.split(key, 4),
+                                          [(b, s, dl), (b, s, dr),
+                                           (b, h, dl), (b, h, dr)]))
+    cq, cs = codec.encode(cx)
+    rq, rs = codec.encode(rx)
+    tblh = np.array([[3, 1], [4, 2]], np.int32)
+    n_pages = 5
+
+    def pool(codes, scales):
+        cp = jnp.zeros((n_pages, page) + codes.shape[2:], codes.dtype)
+        sp = jnp.zeros((n_pages, page // codec.chunk), scales.dtype)
+        for bb in range(b):
+            for t in range(2):
+                pid = int(tblh[bb, t])
+                cp = cp.at[pid].set(codes[bb, t * page:(t + 1) * page])
+                sr = page // codec.chunk
+                sp = sp.at[pid].set(scales[bb, t * sr:(t + 1) * sr])
+        return cp, sp
+
+    cqp, csp = pool(cq, cs)
+    rqp, rsp = pool(rq, rs)
+    pos = np.array([70, 35], np.int32)
+    tbl = jnp.asarray(tblh).at[1, 1].set(0)
+    paged = paged_mla_flash_decode(tbl, pos, qlx, qrx, cqp, csp, rqp, rsp,
+                                   kv_bits=kv_bits, chunk=codec.chunk,
+                                   dl=dl, dr=dr, page=page,
+                                   use_kernel=use_kernel)
+    for bb in range(b):
+        px = jnp.full((1, 1), pos[bb], jnp.int32)
+        if use_kernel:
+            acc, _, l = mla_flash_decode_pallas(
+                qlx, qrx, cq, cs, rq, rs, px, kv_bits=kv_bits,
+                chunk=codec.chunk, dl=dl, dr=dr, s_blk=page,
+                interpret=True)
+        else:
+            acc, _, l = mla_flash_decode_ref(
+                qlx, qrx, cq, cs, rq, rs, px, kv_bits=kv_bits,
+                chunk=codec.chunk, dl=dl, dr=dr, s_blk=page)
+        ref = acc / jnp.maximum(l, 1e-30)
+        assert jnp.array_equal(paged[bb], ref[bb]), \
+            f"request {bb} not bitwise equal (kernel={use_kernel})"
