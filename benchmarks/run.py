@@ -88,8 +88,9 @@ def check_serve_ratio(fresh: dict) -> list[str]:
     every rep including the best); pre-PR-5 results only carry the
     throughput fields, whose ratio is gated the same way (PR-4's
     packed-slower-than-fp decode fails).  The ``long_context`` leg's
-    quantized-KV ``decode_vs_fp_ratio`` fields (PR 7) are gated at the
-    same tolerance when present."""
+    quantized-KV ``decode_vs_fp_ratio`` fields (PR 7), the engine leg's
+    ``sustained_vs_fixed_ratio`` (PR 8) and the chunked-admission ratios
+    (PR 9) are gated at the same tolerance when present."""
     try:
         ratio = fresh["packed"].get("decode_vs_fp_ratio")
         if ratio is None:
@@ -132,6 +133,25 @@ def check_serve_ratio(fresh: dict) -> list[str]:
             f"slower than the fixed-batch baseline (tolerance "
             f"{SERVE_RATIO_TOL:.2f}x): continuous batching must not lose "
             "sustained throughput to fixed waves at equal load")
+    # chunked-admission gate (PR 9): chunked prefill exists to bound
+    # decode stalls while prompts stream in, so it may not cost sustained
+    # throughput or tail latency against whole-prompt admission on the
+    # same trace beyond the tolerance
+    ch = (fresh.get("engine") or {}).get("chunked") or {}
+    r = ch.get("chunked_vs_whole_ratio")
+    if r is not None and float(r) > SERVE_RATIO_TOL:
+        bad.append(
+            f"BENCH_serve.json: chunked-prefill admission sustains "
+            f"{float(r):.2f}x fewer tok/s than whole-prompt admission "
+            f"(tolerance {SERVE_RATIO_TOL:.2f}x): streaming ingestion "
+            "must not lose sustained throughput to whole-prompt prefill")
+    r = ch.get("p99_vs_whole_ratio")
+    if r is not None and float(r) > SERVE_RATIO_TOL:
+        bad.append(
+            f"BENCH_serve.json: chunked-prefill p99 request latency is "
+            f"{float(r):.2f}x the whole-prompt p99 (tolerance "
+            f"{SERVE_RATIO_TOL:.2f}x): chunked admission must not regress "
+            "tail latency")
     return bad
 
 

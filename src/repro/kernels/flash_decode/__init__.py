@@ -2,13 +2,17 @@ from repro.kernels.flash_decode.ops import (  # noqa: F401
     flash_decode,
     mla_flash_decode,
     paged_flash_decode,
+    paged_flash_extend,
     paged_mla_flash_decode,
+    paged_mla_flash_extend,
 )
 from repro.kernels.flash_decode.kernel import (  # noqa: F401
     flash_decode_pallas,
     mla_flash_decode_pallas,
     paged_flash_decode_pallas,
+    paged_flash_extend_pallas,
     paged_mla_flash_decode_pallas,
+    paged_mla_flash_extend_pallas,
 )
 from repro.kernels.flash_decode.ref import (  # noqa: F401
     flash_decode_ref,

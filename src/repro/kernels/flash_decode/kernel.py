@@ -264,6 +264,146 @@ def paged_flash_decode_pallas(tbl, pos, q, kq, ks, vq, vs, *, kv_bits: int,
     return acc, m, l
 
 
+# ------------------------------------------- chunked-prefill (extend) GQA
+
+
+def _paged_fe_kernel(tbl_ref, q_ref, kf_ref, vf_ref, kq_ref, ks_ref, vq_ref,
+                     vs_ref, acc_ref, m_ref, l_ref, *, kv_bits: int,
+                     chunk: int, dh: int, dv: int, page: int, n_past: int,
+                     g: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (L*g, Dh) f32, scale pre-folded
+
+    @pl.when(kk < n_past)
+    def _past_page():
+        k = _dequant_kv(kq_ref[0, :, 0], ks_ref[0, :, 0], kv_bits=kv_bits,
+                        chunk=chunk, d=dh)   # (page, Dh)
+        v = _dequant_kv(vq_ref[0, :, 0], vs_ref[0, :, 0], kv_bits=kv_bits,
+                        chunk=chunk, d=dv)   # (page, Dv)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (L*g, page)
+        valid = jnp.ones((1, page), bool)  # past pages are full
+        m_new, l_new, acc_new = _tile_update(
+            scores, v, valid, m_ref[0], l_ref[0], acc_ref[0])
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+        acc_ref[0] = acc_new
+
+    @pl.when(kk == n_past)
+    def _chunk_tile():
+        kf = kf_ref[0]  # (Lp, Dh) f32 — this chunk's fresh keys (padded)
+        vf = vf_ref[0]  # (Lp, Dv)
+        rows, cols = q.shape[0], kf.shape[0]
+        scores = jax.lax.dot_general(
+            q, kf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (L*g, Lp)
+        # within-chunk causal: query row i is token i // g of the chunk,
+        # key column j is token j — the page-aligned ``start`` offsets
+        # both sides identically and cancels; padded key rows (j >= L)
+        # exceed every query token and mask out for free
+        causal = (jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) // g
+                  >= jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1))
+        m_new, l_new, acc_new = _tile_update(
+            scores, vf, causal, m_ref[0], l_ref[0], acc_ref[0])
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+        acc_ref[0] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dh", "dv", "page", "interpret"))
+def paged_flash_extend_pallas(tbl, q, k_new, v_new, kq, ks, vq, vs, start, *,
+                              kv_bits: int, chunk: int, dh: int, dv: int,
+                              page: int, interpret: bool = True):
+    """Chunked-prefill GQA extend over a block-paged quantized cache.
+
+    Same contract as ``paged_flash_extend_ref`` (bit-identical at
+    tile = page, pinned in tests): an L-token chunk attends to the
+    request's quantized past pages (``tbl``: (n_past,) int32, every page
+    full because chunk boundaries are page-aligned) plus its own fp
+    keys/values with a within-chunk causal mask.  The grid walks
+    (kv_head, past pages + 1 fp tile); past pages dequantize in-register
+    exactly like :func:`paged_flash_decode_pallas`.  q: (1, L, H, Dh)
+    *unscaled*; k_new/v_new: (1, L, KV, Dh|Dv) fp.  Returns (1, L, H, Dv)
+    f32 normalized output."""
+    _, L, h, _ = q.shape
+    kv = k_new.shape[2]
+    g = h // kv
+    n_past = tbl.shape[0]
+    assert page % chunk == 0, (page, chunk)
+    rows_c = page // chunk
+    wk, wv = kq.shape[-1], vq.shape[-1]
+    qf = (q.astype(jnp.float32) * (dh ** -0.5))[0]          # (L, H, Dh)
+    qf = jnp.moveaxis(qf.reshape(L, kv, g, dh), 1, 0)       # (KV, L, g, Dh)
+    qf = qf.reshape(kv, L * g, dh)                          # rows = (l, g)
+    kf = jnp.moveaxis(k_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dh)
+    vf = jnp.moveaxis(v_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dv)
+    # pad the fp tile to a sublane multiple: tiny L would hand XLA a
+    # degenerate contraction it rewrites (fma) differently per context,
+    # breaking kernel == ref bit-parity; padded rows mask out causally
+    # and are exact no-ops of _tile_update
+    Lp = -(-L // 8) * 8
+    if Lp != L:
+        kf = jnp.pad(kf, ((0, 0), (0, Lp - L), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, Lp - L), (0, 0)))
+    del start  # page-aligned: cancels from the causal mask
+    # the fp tile's grid step still maps a (never-read) page block; clamp
+    # its table lookup in range, with a trash entry when there is no past
+    tbl_x = tbl if n_past else jnp.zeros((1,), jnp.int32)
+
+    def _pg(kk, tbl):
+        return tbl[jnp.maximum(jnp.minimum(kk, n_past - 1), 0)]
+
+    kernel = functools.partial(_paged_fe_kernel, kv_bits=kv_bits,
+                               chunk=chunk, dh=dh, dv=dv, page=page,
+                               n_past=n_past, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(kv, n_past + 1),
+        in_specs=[
+            pl.BlockSpec((1, L * g, dh), lambda i, kk, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, Lp, dh), lambda i, kk, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, Lp, dv), lambda i, kk, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, page, 1, wk),
+                         lambda i, kk, tbl: (_pg(kk, tbl), 0, i, 0)),
+            pl.BlockSpec((1, rows_c, 1),
+                         lambda i, kk, tbl: (_pg(kk, tbl), 0, i)),
+            pl.BlockSpec((1, page, 1, wv),
+                         lambda i, kk, tbl: (_pg(kk, tbl), 0, i, 0)),
+            pl.BlockSpec((1, rows_c, 1),
+                         lambda i, kk, tbl: (_pg(kk, tbl), 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L * g, dv), lambda i, kk, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, L * g, 1), lambda i, kk, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, L * g, 1), lambda i, kk, tbl: (i, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((kv, L * g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((kv, L * g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kv, L * g, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tbl_x, qf, kf, vf, kq, ks, vq, vs)
+    out = acc / jnp.maximum(l, 1e-30)                       # (KV, L*g, Dv)
+    out = jnp.moveaxis(out.reshape(kv, L, g, dv), 0, 1)     # (L, KV, g, Dv)
+    return out.reshape(L, h, dv)[None]
+
+
 def _mla_fd_kernel(ql_ref, qr_ref, cq_ref, cs_ref, rq_ref, rs_ref, pos_ref,
                    acc_ref, m_ref, l_ref, *, kv_bits: int, chunk: int,
                    dl: int, dr: int, s_blk: int):
@@ -429,3 +569,133 @@ def paged_mla_flash_decode_pallas(tbl, pos, ql, qr, cq, cs, rq, rs, *,
         interpret=interpret,
     )(tbl, pos, ql, qr, cq, cs, rq, rs)
     return acc, m, l
+
+
+# ------------------------------------------- chunked-prefill (extend) MLA
+
+
+def _paged_mla_fe_kernel(tbl_ref, ql_ref, qr_ref, cf_ref, rf_ref, cq_ref,
+                         cs_ref, rq_ref, rs_ref, acc_ref, m_ref, l_ref, *,
+                         kv_bits: int, chunk: int, dl: int, dr: int,
+                         page: int, n_past: int, h: int):
+    kk = pl.program_id(0)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ql = ql_ref[...]  # (L*h, dl) f32, scale pre-folded
+    qr = qr_ref[...]  # (L*h, dr)
+
+    @pl.when(kk < n_past)
+    def _past_page():
+        c = _dequant_kv(cq_ref[0], cs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                        d=dl)               # (page, dl) — keys *and* values
+        r = _dequant_kv(rq_ref[0], rs_ref[0], kv_bits=kv_bits, chunk=chunk,
+                        d=dr)               # (page, dr)
+        scores = (jax.lax.dot_general(ql, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(qr, r, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+        valid = jnp.ones((1, page), bool)  # past pages are full
+        m_new, l_new, acc_new = _tile_update(
+            scores, c, valid, m_ref[...], l_ref[...], acc_ref[...])
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
+
+    @pl.when(kk == n_past)
+    def _chunk_tile():
+        cf = cf_ref[...]  # (Lp, dl) f32 — this chunk's latents (padded)
+        rf = rf_ref[...]  # (Lp, dr)
+        rows, cols = ql.shape[0], cf.shape[0]
+        scores = (jax.lax.dot_general(ql, cf, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+                  + jax.lax.dot_general(qr, rf, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+        # query row i is chunk token i // h, key column j is chunk token
+        # j — the page-aligned ``start`` cancels from both sides; padded
+        # key rows (j >= L) exceed every query token and mask out free
+        causal = (jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 0) // h
+                  >= jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1))
+        m_new, l_new, acc_new = _tile_update(
+            scores, cf, causal, m_ref[...], l_ref[...], acc_ref[...])
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_bits", "chunk", "dl", "dr", "page", "interpret"))
+def paged_mla_flash_extend_pallas(tbl, ql, qr, c_new, r_new, cq, cs, rq, rs,
+                                  start, *, kv_bits: int, chunk: int,
+                                  dl: int, dr: int, page: int,
+                                  interpret: bool = True):
+    """Chunked-prefill MLA latent extend over block-paged latent pools.
+
+    Same contract as ``paged_mla_flash_extend_ref`` (bit-identical at
+    tile = page, pinned in tests): an L-token chunk's absorbed queries
+    attend to the request's quantized latent pages plus the fp
+    within-chunk latents (causal); values are the latents (v = c).
+    ql/qr: (L, H, dl|dr) *scaled* queries; c_new/r_new: (L, dl|dr) fp.
+    Returns (L, H, dl) f32 latent context."""
+    L, h, _ = ql.shape
+    n_past = tbl.shape[0]
+    assert page % chunk == 0, (page, chunk)
+    rows_c = page // chunk
+    wc, wr = cq.shape[-1], rq.shape[-1]
+    qlf = ql.astype(jnp.float32).reshape(L * h, dl)
+    qrf = qr.astype(jnp.float32).reshape(L * h, dr)
+    cf = c_new.astype(jnp.float32)                          # (L, dl)
+    rf = r_new.astype(jnp.float32)                          # (L, dr)
+    # pad the fp tile to a sublane multiple (see the GQA extend wrapper)
+    Lp = -(-L // 8) * 8
+    if Lp != L:
+        cf = jnp.pad(cf, ((0, Lp - L), (0, 0)))
+        rf = jnp.pad(rf, ((0, Lp - L), (0, 0)))
+    del start  # page-aligned: cancels from the causal mask
+    tbl_x = tbl if n_past else jnp.zeros((1,), jnp.int32)
+
+    def _pg(kk, tbl):
+        return tbl[jnp.maximum(jnp.minimum(kk, n_past - 1), 0)]
+
+    kernel = functools.partial(_paged_mla_fe_kernel, kv_bits=kv_bits,
+                               chunk=chunk, dl=dl, dr=dr, page=page,
+                               n_past=n_past, h=h)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_past + 1,),
+        in_specs=[
+            pl.BlockSpec((L * h, dl), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((L * h, dr), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((Lp, dl), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((Lp, dr), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((1, page, wc),
+                         lambda kk, tbl: (_pg(kk, tbl), 0, 0)),
+            pl.BlockSpec((1, rows_c), lambda kk, tbl: (_pg(kk, tbl), 0)),
+            pl.BlockSpec((1, page, wr),
+                         lambda kk, tbl: (_pg(kk, tbl), 0, 0)),
+            pl.BlockSpec((1, rows_c), lambda kk, tbl: (_pg(kk, tbl), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L * h, dl), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((L * h, 1), lambda kk, tbl: (0, 0)),
+            pl.BlockSpec((L * h, 1), lambda kk, tbl: (0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((L * h, dl), jnp.float32),
+            jax.ShapeDtypeStruct((L * h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((L * h, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(tbl_x, qlf, qrf, cf, rf, cq, cs, rq, rs)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(L, h, dl)

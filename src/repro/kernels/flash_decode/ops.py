@@ -37,10 +37,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.flash_decode.kernel import (
     flash_decode_pallas, mla_flash_decode_pallas,
-    paged_flash_decode_pallas, paged_mla_flash_decode_pallas)
+    paged_flash_decode_pallas, paged_flash_extend_pallas,
+    paged_mla_flash_decode_pallas, paged_mla_flash_extend_pallas)
 from repro.kernels.flash_decode.ref import (
     flash_decode_ref, mla_flash_decode_ref, paged_flash_decode_ref,
-    paged_mla_flash_decode_ref)
+    paged_flash_extend_ref, paged_mla_flash_decode_ref,
+    paged_mla_flash_extend_ref)
 
 try:  # jax >= 0.4.35
     from jax import shard_map as _shard_map
@@ -291,3 +293,48 @@ def paged_mla_flash_decode(tbl, pos, ql, qr, cq, cs, rq, rs, *,
             tbl, px, ql, qr, cq, cs, rq, rs, kv_bits=kv_bits, chunk=chunk,
             dl=dl, dr=dr, page=page)
     return _finalize(acc, l)
+
+
+# ---------------------------------------------- paged (chunked-prefill) extend
+
+
+def paged_flash_extend(tbl, q, k_new, v_new, kq, ks, vq, vs, start, *,
+                       kv_bits: int, chunk: int, dh: int, dv: int,
+                       page: int, use_kernel: bool | None = None):
+    """Chunked-prefill GQA attention over a block-paged quantized pool.
+
+    An L-token query chunk attends to its own request's quantized past
+    pages (``tbl``: (n_past,) int32 — chunk boundaries are page-aligned so
+    every past page is full) plus its fp within-chunk keys/values
+    (causal).  q: (1, L, H, Dh) *unscaled*; k_new/v_new: (1, L, KV, ·) fp;
+    start = n_past * page.  Returns (1, L, H, Dv) f32.  Meshless, like
+    :func:`paged_flash_decode` (the engine owns the batch axis)."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    if use_kernel:
+        return paged_flash_extend_pallas(
+            tbl, q, k_new, v_new, kq, ks, vq, vs, start, kv_bits=kv_bits,
+            chunk=chunk, dh=dh, dv=dv, page=page, interpret=_interpret())
+    return paged_flash_extend_ref(
+        tbl, q, k_new, v_new, kq, ks, vq, vs, start, kv_bits=kv_bits,
+        chunk=chunk, dh=dh, dv=dv, page=page)
+
+
+def paged_mla_flash_extend(tbl, ql, qr, c_new, r_new, cq, cs, rq, rs, start,
+                           *, kv_bits: int, chunk: int, dl: int, dr: int,
+                           page: int, use_kernel: bool | None = None):
+    """Chunked-prefill MLA latent attention over block-paged latent pools.
+
+    ql/qr: (L, H, dl|dr) *scaled* absorbed queries; c_new/r_new:
+    (L, dl|dr) fp latents of this chunk; values are the latents (v = c).
+    Returns (L, H, dl) f32 latent context.  Meshless."""
+    if use_kernel is None:
+        use_kernel = _kernel_default()
+    if use_kernel:
+        return paged_mla_flash_extend_pallas(
+            tbl, ql, qr, c_new, r_new, cq, cs, rq, rs, start,
+            kv_bits=kv_bits, chunk=chunk, dl=dl, dr=dr, page=page,
+            interpret=_interpret())
+    return paged_mla_flash_extend_ref(
+        tbl, ql, qr, c_new, r_new, cq, cs, rq, rs, start, kv_bits=kv_bits,
+        chunk=chunk, dl=dl, dr=dr, page=page)

@@ -238,7 +238,12 @@ def paged_flash_extend_ref(tbl, q, k_new, v_new, kq, ks, vq, vs, start, *,
     queries; k_new/v_new: (1, L, KV, Dh|Dv) this chunk's fp keys/values.
     Past pages dequantize tile-by-tile in-register (``_dequant_kv``) and
     stream through the same ``_tile_update`` as decode; the fp chunk is
-    the final "tile" with a causal mask.  Returns (1, L, H, Dv)."""
+    the final "tile" with a causal mask.  Every tile — the fp chunk
+    included — runs as one scan step so the ``(m, l, acc)`` triple
+    materializes through the carry between tiles exactly as it does
+    through the kernel's output refs (a top-level final update would let
+    XLA fuse it with the finalize and break bit-parity by an ulp).
+    Returns (1, L, H, Dv)."""
     _, L, h, _ = q.shape
     kv = k_new.shape[2]
     g = h // kv
@@ -248,45 +253,59 @@ def paged_flash_extend_ref(tbl, q, k_new, v_new, kq, ks, vq, vs, start, *,
     qf = qf.reshape(kv, L * g, dh)                          # rows = (l, g)
     row_pos = jnp.repeat(start + jnp.arange(L), g)          # (L*g,)
 
-    def one_page(carry, pid):
+    # final tile: this chunk's fp keys/values, causal within the chunk.
+    # Padded to a sublane multiple like the kernel wrapper — a tiny L
+    # hands XLA a degenerate contraction it rewrites (fma) differently
+    # per context, breaking bit-parity; padded key rows sit causally
+    # after every query row and mask out for free.
+    Lp = -(-L // 8) * 8
+    kf = jnp.moveaxis(k_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dh)
+    vf = jnp.moveaxis(v_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dv)
+    if Lp != L:
+        kf = jnp.pad(kf, ((0, 0), (0, Lp - L), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, Lp - L), (0, 0)))
+    kv_pos = start + jnp.arange(Lp)
+    causal = row_pos[:, None] >= kv_pos[None, :]            # (L*g, Lp)
+    tbl_x = tbl if n_past else jnp.zeros((1,), jnp.int32)
+
+    def step(carry, kk):
         m, l, acc = carry
+        pid = tbl_x[jnp.maximum(jnp.minimum(kk, n_past - 1), 0)]
         kc, vc = jnp.take(kq, pid, axis=0), jnp.take(vq, pid, axis=0)
         ksc, vsc = jnp.take(ks, pid, axis=0), jnp.take(vs, pid, axis=0)
 
-        def per_head(qh, kcj, kscj, vcj, vscj, m1, l1, acc1):
-            k = _dequant_kv(kcj, kscj, kv_bits=kv_bits, chunk=chunk, d=dh)
-            v = _dequant_kv(vcj, vscj, kv_bits=kv_bits, chunk=chunk, d=dv)
-            scores = jax.lax.dot_general(
-                qh, k, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)  # (L*g, page)
-            valid = jnp.ones((1, page), bool)  # past pages are full
-            return _tile_update(scores, v, valid, m1, l1, acc1)
+        def past(m, l, acc):
+            def per_head(qh, kcj, kscj, vcj, vscj, m1, l1, acc1):
+                k = _dequant_kv(kcj, kscj, kv_bits=kv_bits, chunk=chunk,
+                                d=dh)
+                v = _dequant_kv(vcj, vscj, kv_bits=kv_bits, chunk=chunk,
+                                d=dv)
+                scores = jax.lax.dot_general(
+                    qh, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)  # (L*g, page)
+                valid = jnp.ones((1, page), bool)  # past pages are full
+                return _tile_update(scores, v, valid, m1, l1, acc1)
 
-        m2, l2, acc2 = jax.vmap(per_head)(
-            qf, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(ksc, 1, 0),
-            jnp.moveaxis(vc, 1, 0), jnp.moveaxis(vsc, 1, 0), m, l, acc)
-        return (m2, l2, acc2), None
+            return jax.vmap(per_head)(
+                qf, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(ksc, 1, 0),
+                jnp.moveaxis(vc, 1, 0), jnp.moveaxis(vsc, 1, 0), m, l, acc)
+
+        def fp_chunk(m, l, acc):
+            def final(qh, kh, vh, m1, l1, acc1):
+                scores = jax.lax.dot_general(
+                    qh, kh, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                return _tile_update(scores, vh, causal, m1, l1, acc1)
+
+            return jax.vmap(final)(qf, kf, vf, m, l, acc)
+
+        return jax.lax.cond(kk < n_past, past, fp_chunk, m, l, acc), None
 
     m0 = jnp.full((kv, L * g, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((kv, L * g, 1), jnp.float32)
     acc0 = jnp.zeros((kv, L * g, dv), jnp.float32)
-    if n_past:
-        (m, l, acc), _ = jax.lax.scan(one_page, (m0, l0, acc0), tbl)
-    else:
-        m, l, acc = m0, l0, acc0
-
-    # final tile: this chunk's fp keys/values, causal within the chunk
-    kf = jnp.moveaxis(k_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dh)
-    vf = jnp.moveaxis(v_new[0].astype(jnp.float32), 1, 0)   # (KV, L, Dv)
-    kv_pos = start + jnp.arange(L)
-    causal = row_pos[:, None] >= kv_pos[None, :]            # (L*g, L)
-
-    def final(qh, kh, vh, m1, l1, acc1):
-        scores = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
-                                     preferred_element_type=jnp.float32)
-        return _tile_update(scores, vh, causal, m1, l1, acc1)
-
-    m, l, acc = jax.vmap(final)(qf, kf, vf, m, l, acc)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  jnp.arange(n_past + 1))
     out = acc / jnp.maximum(l, 1e-30)                       # (KV, L*g, Dv)
     out = jnp.moveaxis(out.reshape(kv, L, g, dv), 0, 1)     # (L, KV, g, Dv)
     return out.reshape(L, h, dv)[None]
@@ -300,45 +319,62 @@ def paged_mla_flash_extend_ref(tbl, ql, qr, c_new, r_new, cq, cs, rq, rs,
     """Chunked-prefill MLA latent attention: an L-token chunk's absorbed
     queries attend to quantized latent pages of earlier chunks plus the fp
     within-chunk latents (causal).  ql/qr: (L, H, dl|dr) *scaled* queries;
-    c_new/r_new: (L, dl|dr) fp latents of this chunk.  Returns (L, H, dl)
-    latent context."""
+    c_new/r_new: (L, dl|dr) fp latents of this chunk.  Like the GQA
+    extend ref, the fp chunk runs as the last scan step so every tile's
+    ``(m, l, acc)`` materializes through the carry (bit-parity with the
+    kernel's output refs).  Returns (L, H, dl) latent context."""
     L, h, _ = ql.shape
     n_past = tbl.shape[0]
     qlf = ql.astype(jnp.float32).reshape(L * h, dl)
     qrf = qr.astype(jnp.float32).reshape(L * h, dr)
     row_pos = jnp.repeat(start + jnp.arange(L), h)
 
-    def one_page(carry, pid):
+    # fp tile padded to a sublane multiple (see the GQA extend ref)
+    Lp = -(-L // 8) * 8
+    cf = c_new.astype(jnp.float32)
+    rf = r_new.astype(jnp.float32)
+    if Lp != L:
+        cf = jnp.pad(cf, ((0, Lp - L), (0, 0)))
+        rf = jnp.pad(rf, ((0, Lp - L), (0, 0)))
+    kv_pos = start + jnp.arange(Lp)
+    causal = row_pos[:, None] >= kv_pos[None, :]
+    tbl_x = tbl if n_past else jnp.zeros((1,), jnp.int32)
+
+    def step(carry, kk):
         m, l, acc = carry
-        c = _dequant_kv(jnp.take(cq, pid, axis=0),
-                        jnp.take(cs, pid, axis=0), kv_bits=kv_bits,
-                        chunk=chunk, d=dl)
-        r = _dequant_kv(jnp.take(rq, pid, axis=0),
-                        jnp.take(rs, pid, axis=0), kv_bits=kv_bits,
-                        chunk=chunk, d=dr)
-        scores = (jax.lax.dot_general(qlf, c, (((1,), (1,)), ((), ())),
-                                      preferred_element_type=jnp.float32)
-                  + jax.lax.dot_general(qrf, r, (((1,), (1,)), ((), ())),
-                                        preferred_element_type=jnp.float32))
-        valid = jnp.ones((1, page), bool)
-        return _tile_update(scores, c, valid, m, l, acc), None
+        pid = tbl_x[jnp.maximum(jnp.minimum(kk, n_past - 1), 0)]
+
+        def past(m, l, acc):
+            c = _dequant_kv(jnp.take(cq, pid, axis=0),
+                            jnp.take(cs, pid, axis=0), kv_bits=kv_bits,
+                            chunk=chunk, d=dl)
+            r = _dequant_kv(jnp.take(rq, pid, axis=0),
+                            jnp.take(rs, pid, axis=0), kv_bits=kv_bits,
+                            chunk=chunk, d=dr)
+            scores = (jax.lax.dot_general(
+                qlf, c, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+                + jax.lax.dot_general(
+                    qrf, r, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            valid = jnp.ones((1, page), bool)
+            return _tile_update(scores, c, valid, m, l, acc)
+
+        def fp_chunk(m, l, acc):
+            scores = (jax.lax.dot_general(
+                qlf, cf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+                + jax.lax.dot_general(
+                    qrf, rf, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            return _tile_update(scores, cf, causal, m, l, acc)
+
+        return jax.lax.cond(kk < n_past, past, fp_chunk, m, l, acc), None
 
     m0 = jnp.full((L * h, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((L * h, 1), jnp.float32)
     acc0 = jnp.zeros((L * h, dl), jnp.float32)
-    if n_past:
-        (m, l, acc), _ = jax.lax.scan(one_page, (m0, l0, acc0), tbl)
-    else:
-        m, l, acc = m0, l0, acc0
-
-    cf = c_new.astype(jnp.float32)
-    rf = r_new.astype(jnp.float32)
-    kv_pos = start + jnp.arange(L)
-    causal = row_pos[:, None] >= kv_pos[None, :]
-    scores = (jax.lax.dot_general(qlf, cf, (((1,), (1,)), ((), ())),
-                                  preferred_element_type=jnp.float32)
-              + jax.lax.dot_general(qrf, rf, (((1,), (1,)), ((), ())),
-                                    preferred_element_type=jnp.float32))
-    m, l, acc = _tile_update(scores, cf, causal, m, l, acc)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  jnp.arange(n_past + 1))
     out = acc / jnp.maximum(l, 1e-30)
     return out.reshape(L, h, dl)

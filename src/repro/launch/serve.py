@@ -64,9 +64,12 @@ with their own budget and ``SamplingParams``, arrive on a Poisson trace
 a shared block-paged quantized KV pool (``--n-pages``; page = ``kv_chunk``
 tokens across every layer), decode continuously in bursts of
 ``--burst-steps`` alongside whatever else is in flight, and retire by
-releasing their pages for reuse.  Per-request token streams are
-bit-identical to a single-request ``generate()`` call (pinned by
-tests/test_serving.py).  Requires ``--kv-bits 8`` or ``2`` — the pools
+releasing their pages for reuse.  ``--prefill-chunk N`` streams prompt
+ingestion through the running batch in page-aligned chunks (one chunk
+per scheduling round per ingesting request) instead of stalling decode
+on whole-prompt prefills — see serving/README.md "Chunked prefill".
+Per-request token streams are bit-identical to a single-request
+``generate()`` call either way (pinned by tests/test_serving.py).  Requires ``--kv-bits 8`` or ``2`` — the pools
 store codes+scales, never fp.  See src/repro/serving/README.md for the
 API and the page-size math.
 
@@ -84,6 +87,7 @@ import argparse
 import dataclasses
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -197,6 +201,13 @@ def generate(model, params, prompts, n_gen: int, *, media=None, frames=None,
 def generate_batch(model, params, requests, *, loop: str = "scan"):
     """Serve a list of ``ServeRequest`` through the fixed-batch scan loop.
 
+    .. deprecated:: use ``serving.Engine`` — the engine serves the same
+       ``ServeRequest`` objects with bit-identical per-request streams,
+       without this loop's homogeneity restrictions, and with continuous
+       batching / paged KV reuse on top.  This wrapper emits a
+       ``DeprecationWarning`` and will be removed once the CLI's batch
+       mode moves over.
+
     The request-oriented twin of :func:`generate`: one request type shared
     with ``serving.Engine``, same per-request token streams.  The
     fixed-shape loop can only batch *homogeneous* requests — equal prompt
@@ -209,6 +220,11 @@ def generate_batch(model, params, requests, *, loop: str = "scan"):
     Returns one token list per request, truncated to its
     ``max_new_tokens`` (eos handling too is engine-only here: the fixed
     batch runs to the longest budget regardless)."""
+    warnings.warn(
+        "generate_batch is deprecated: serve ServeRequest objects through "
+        "serving.Engine (continuous batching, same bit-identical streams, "
+        "no homogeneous-batch restrictions)",
+        DeprecationWarning, stacklevel=2)
     if not requests:
         return []
     t0 = len(requests[0].tokens)
@@ -318,6 +334,13 @@ def main(argv=None):
     ap.add_argument("--arrival-rate", type=float, default=0.5,
                     help="engine mode: Poisson arrivals per scheduling "
                     "round")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine mode: admit prompts in chunks of this "
+                    "many tokens (rounded up to a page multiple), "
+                    "interleaved with decode bursts — long prompts stop "
+                    "stalling the running batch; 0 (default) admits "
+                    "whole prompts in one prefill.  Tokens stay "
+                    "bit-identical either way (exact chunked prefill)")
     ap.add_argument("--kv-bits", type=int, default=None,
                     help="KV-cache precision: 0 = activation dtype "
                     "(default), 8 = int8 codes + per-token scales, 2 = "
@@ -400,15 +423,21 @@ def main(argv=None):
         engine = Engine(model, params, max_slots=args.max_slots,
                         n_pages=args.n_pages,
                         max_pages_per_request=max(need, 1),
-                        burst_steps=args.burst_steps)
+                        burst_steps=args.burst_steps,
+                        prefill_chunk=args.prefill_chunk or None)
         stats = run_trace(engine, poisson_trace(
             reqs, rate=args.arrival_rate, seed=args.seed))
-        print(f"engine: {stats['n_requests']} requests, "
+        admit = ("chunked (%d tokens/chunk)" % engine.prefill_chunk
+                 if engine.prefill_chunk else "whole-prompt")
+        print(f"engine [{admit} admission]: {stats['n_requests']} requests, "
               f"{stats['n_tokens']} tokens in {stats['wall_s']:.2f}s over "
               f"{stats['rounds']} rounds "
               f"({stats['sustained_tok_s']:.1f} sustained tok/s)")
         print(f"latency: p50={stats['p50_latency_s']:.3f}s "
               f"p99={stats['p99_latency_s']:.3f}s; "
+              f"ttft: p50={stats['ttft_p50_s']:.3f}s "
+              f"p99={stats['ttft_p99_s']:.3f}s; "
+              f"admission stall {stats['admission_stall_s']:.2f}s; "
               f"free pages after drain: {engine.pools.free_pages()}"
               f"/{args.n_pages}")
         first = stats["outputs"][0]

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 from repro.core.quantizer import dequantize_packed
 from repro.kernels.flash_decode.ops import (flash_decode, mla_flash_decode,
                                             paged_flash_decode,
-                                            paged_mla_flash_decode)
+                                            paged_flash_extend,
+                                            paged_mla_flash_decode,
+                                            paged_mla_flash_extend)
 from repro.kernels.quant_matmul.ops import (is_packed, mla_latent_weights,
                                             quant_matmul, quant_matmul_t)
 from repro.models.layers import apply_rope, dense_init, linear, rms_norm
@@ -642,8 +644,9 @@ def _mla_q_and_expand(p, cfg, x, positions):
     Pure code motion out of :func:`mla_decode` — both paths run the exact
     same ops here, so per-request results stay bitwise identical between
     the flat cache and the paged engine.  ``positions`` is whatever
-    ``apply_rope`` broadcasts against (..., T=1): ``pos[None]`` on the
-    flat path, per-slot ``pos[:, None]`` on the paged path."""
+    ``apply_rope`` broadcasts against (..., T, ...): ``pos[None]`` on the
+    flat path, per-slot ``pos[:, None]`` on the paged path, a chunk's
+    ``start + arange(L)`` on the extend path (T = L rows)."""
     b, t, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -658,16 +661,20 @@ def _mla_q_and_expand(p, cfg, x, positions):
     if is_packed(p["wkv_b"]):
         pw_k, pw_v = mla_latent_weights(p["wkv_b"], h, dn, dv)
 
-        def absorb_k(qn):  # (B, 1, H, dn) -> (B, 1, H, kvr)
-            qh = qn.astype(jnp.float32)[:, 0].transpose(1, 0, 2)  # (H, B, dn)
-            lat = jax.vmap(quant_matmul_t)(qh, pw_k)  # (H, B, kvr)
-            return lat.transpose(1, 0, 2)[:, None]
+        def absorb_k(qn):  # (B, T, H, dn) -> (B, T, H, kvr)
+            bt = qn.shape[0] * qn.shape[1]
+            qh = qn.astype(jnp.float32).reshape(bt, h, dn)
+            qh = qh.transpose(1, 0, 2)  # (H, B*T, dn)
+            lat = jax.vmap(quant_matmul_t)(qh, pw_k)  # (H, B*T, kvr)
+            return lat.transpose(1, 0, 2).reshape(qn.shape[0], qn.shape[1],
+                                                  h, kvr)
 
-        def expand_v(cl):  # (B, 1, H, kvr) -> (B, 1, H, dv)
-            ch = cl[:, 0].transpose(1, 0, 2)  # (H, B, kvr)
+        def expand_v(cl):  # (B, T, H, kvr) -> (B, T, H, dv)
+            b_, t_ = cl.shape[0], cl.shape[1]
+            ch = cl.reshape(b_ * t_, h, kvr).transpose(1, 0, 2)
             out = jax.vmap(functools.partial(quant_matmul, shard=False))(
                 ch, pw_v)
-            return out.transpose(1, 0, 2)[:, None]
+            return out.transpose(1, 0, 2).reshape(b_, t_, h, dv)
     else:
         wkv_b = _materialize(p["wkv_b"]).reshape(kvr, h, dn + dv)
         w_k, w_v = wkv_b[..., :dn], wkv_b[..., dn:]
@@ -761,6 +768,51 @@ def mla_decode_paged(p, cfg, x, c_pool, cs_pool, r_pool, rs_pool, page_tbl,
         kv_bits=kv_bits, chunk=chunk, dl=kvr, dr=dr,
         page=c_pool.shape[1])[:, None]          # (B, 1, H, kvr)
     return linear(expand_v(ctx_lat).reshape(b, 1, h * dv).astype(x.dtype),
+                  p["wo"])
+
+
+def paged_extend_attention_quantized(q, k_new, v_new, k_pool, ks_pool,
+                                     v_pool, vs_pool, tbl, start, *,
+                                     kv_bits: int, chunk: int):
+    """One prompt chunk's GQA attention against the request's own quantized
+    pages plus the fp within-chunk rows (opt-in "paged" chunked prefill).
+
+    q: (1, L, H, Dh); k_new/v_new: (1, L, KV, Dh) this chunk's fp keys and
+    values; tbl: (n_past,) i32 — the pages holding the already-ingested
+    chunks (earlier rows are read back as codes, dequantized in-register by
+    the extend kernel, so this route is HBM-cheap but *lossy* versus the
+    flat prefill); start: () i32 page-aligned chunk offset."""
+    out = paged_flash_extend(tbl, q, k_new, v_new, k_pool, ks_pool, v_pool,
+                             vs_pool, start, kv_bits=kv_bits, chunk=chunk,
+                             dh=q.shape[-1], dv=v_new.shape[-1],
+                             page=k_pool.shape[1])
+    return out.astype(q.dtype)
+
+
+def mla_extend_paged(p, cfg, x, c_new, r_new, pools, tbl, start, positions, *,
+                     kv_bits: int, chunk: int):
+    """One prompt chunk's absorbed MLA attention against quantized latent
+    pages plus the chunk's fp latents (opt-in "paged" chunked prefill).
+
+    x: (1, L, D) chunk rows; c_new/r_new: (1, L, kvr)/(1, L, dr) this
+    chunk's fp latent/rope cache rows; tbl: (n_past,) i32 pages of the
+    already-ingested chunks.  Queries come through the same
+    :func:`_mla_q_and_expand` absorption as decode (generalized to L rows),
+    so the chunk attends in latent space end to end."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    q_lat, q_rope, expand_v = _mla_q_and_expand(p, cfg, x, positions)
+    scale = (dn + dr) ** -0.5
+    ql = (q_lat.astype(jnp.float32) * scale)[0]    # (L, H, kvr)
+    qr = (q_rope.astype(jnp.float32) * scale)[0]   # (L, H, dr)
+    ctx_lat = paged_mla_flash_extend(
+        tbl, ql, qr, c_new[0].astype(jnp.float32),
+        r_new[0].astype(jnp.float32), pools["c"], pools["cs"], pools["r"],
+        pools["rs"], start, kv_bits=kv_bits, chunk=chunk, dl=kvr, dr=dr,
+        page=pools["c"].shape[1])[None]             # (1, L, H, kvr)
+    return linear(expand_v(ctx_lat).reshape(b, t, h * dv).astype(x.dtype),
                   p["wo"])
 
 

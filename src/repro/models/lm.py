@@ -349,6 +349,148 @@ def paged_decode_block(p, cfg, meta: BlockMeta, x, pools, page_tbl, pos,
     return x, new_pools
 
 
+def pad_cache_entry(c, codec, s: int):
+    """Zero-pad one block's sequence-indexed cache entries to length ``s``
+    (codes) / ``scale_rows(s)`` (scales); everything else passes through.
+    Shared by whole-prompt prefill (s = rounded prompt length) and chunked
+    prefill (s = rounded chunk length) — zero rows match what the paged
+    kernels mask out, and codes are padded *after* encoding real rows (a
+    zero kv2 row would encode to code 2, not 0)."""
+    def f(key, a):
+        if key in ("k", "v", "c", "r"):
+            tgt = s
+        elif key in ("ks", "vs", "cs", "rs"):
+            tgt = codec.scale_rows(s)
+        else:
+            return a
+        pad = [(0, 0)] * a.ndim
+        pad[1] = (0, tgt - a.shape[1])
+        return jnp.pad(a, pad)
+    return {k: (f(k, v) if not isinstance(v, (dict, tuple)) else v)
+            for k, v in c.items()}
+
+
+def ingest_block(p, cfg, meta: BlockMeta, x, buf, start, positions,
+                 t_total: int):
+    """One prompt chunk through one block against fp prefix buffers (exact
+    chunked prefill).
+
+    x: (1, L, D) chunk rows; buf: fp K/V buffers of full prompt length
+    ``t_total`` (GQA: post-rope K/V; MLA: the *expanded* per-head K/V —
+    flash_attention's operands); start: () i32 page-aligned chunk offset.
+    The chunk's rows are sliced into the buffers, then flash_attention runs
+    with ``q_offset=start`` and ``kv_chunk=min(512, t_total)`` — the same
+    kv tiles, in the same order, under the same causal mask as the flat
+    prefill's pass over the whole prompt, and every other op here is
+    row-wise.  Hidden rows, cache codes and the final chunk's logits are
+    therefore bitwise the whole-prompt prefill's.  Returns
+    (x, new_buf, chunk_cache) with chunk_cache holding codes for the L
+    chunk rows only."""
+    codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    b, t, _ = h.shape
+    if meta.mixer == "attn":
+        q, k, v = att.gqa_qkv(p["mixer"], cfg, h, positions)
+        k_buf = jax.lax.dynamic_update_slice_in_dim(buf["k"], k, start, 1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(buf["v"], v, start, 1)
+        out = att.flash_attention(q, k_buf, v_buf, causal=True,
+                                  kv_chunk=min(512, t_total), q_offset=start)
+        mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
+        if codec.quantized:
+            kq, ks = codec.encode(k)
+            vq, vs = codec.encode(v)
+            cache = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+        else:
+            cache = {"k": k, "v": v}
+        new_buf = {"k": k_buf, "v": v_buf}
+    elif meta.mixer == "mla":
+        q, k, v, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, positions)
+        k_buf = jax.lax.dynamic_update_slice_in_dim(buf["k"], k, start, 1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(buf["v"], v, start, 1)
+        out = att.flash_attention(q, k_buf, v_buf, causal=True,
+                                  kv_chunk=min(512, t_total), q_offset=start)
+        mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
+        if codec.quantized:
+            cq, cs = codec.encode(c_kv)
+            rq, rs = codec.encode(k_rope)
+            cache = {"c": cq, "cs": cs, "r": rq, "rs": rs}
+        else:
+            cache = {"c": c_kv, "r": k_rope}
+        new_buf = {"k": k_buf, "v": v_buf}
+    else:
+        raise NotImplementedError(
+            f"chunked prefill supports attn/mla mixers, got {meta.mixer!r} — "
+            "ssm/cross state is sequential, not per-page; serve such models "
+            "through the flat generate() path")
+    x = x + mix
+    if meta.ffn != "none":
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if meta.ffn == "dense":
+            y = apply_dense_ffn(p["ffn"], h)
+        else:
+            y, _ = _routed_moe(p["ffn"], cfg, h, LOCAL)
+            if "shared" in p["ffn"]:
+                t = h.shape[1]
+                y = y + apply_dense_ffn(
+                    p["ffn"]["shared"], h.reshape(b * t, -1)
+                ).reshape(b, t, -1)
+        x = x + y
+    return x, new_buf, cache
+
+
+def paged_extend_block(p, cfg, meta: BlockMeta, x, pools, tbl, start,
+                       positions):
+    """One prompt chunk through one block against the request's quantized
+    pages (opt-in "paged" chunked prefill).
+
+    No fp prefix buffer exists: earlier chunks are read back as codes
+    through the paged extend kernels (in-register dequant, same tile math
+    as paged decode), the chunk's own rows attend causally in fp.
+    HBM-cheap — the only per-request state is the pages themselves — but
+    *lossy* versus the flat prefill, since past keys have already been
+    through the codec.  tbl: (n_past,) i32 pages of the already-ingested
+    chunks.  Returns (x, chunk_cache)."""
+    codec = att.kv_codec(cfg.kv_bits, cfg.kv_chunk)
+    h = rms_norm(x, p["mixer_norm"], cfg.norm_eps)
+    b, t, _ = h.shape
+    if meta.mixer == "attn":
+        q, k, v = att.gqa_qkv(p["mixer"], cfg, h, positions)
+        out = att.paged_extend_attention_quantized(
+            q, k, v, pools["k"], pools["ks"], pools["v"], pools["vs"], tbl,
+            start, kv_bits=codec.kv_bits, chunk=codec.chunk)
+        mix = linear(out.reshape(b, t, -1), p["mixer"]["wo"])
+        kq, ks = codec.encode(k)
+        vq, vs = codec.encode(v)
+        cache = {"k": kq, "ks": ks, "v": vq, "vs": vs}
+    elif meta.mixer == "mla":
+        _, _, _, c_kv, k_rope = att.mla_qkv(p["mixer"], cfg, h, positions)
+        mix = att.mla_extend_paged(
+            p["mixer"], cfg, h, c_kv, k_rope, pools, tbl, start, positions,
+            kv_bits=codec.kv_bits, chunk=codec.chunk)
+        cq, cs = codec.encode(c_kv)
+        rq, rs = codec.encode(k_rope)
+        cache = {"c": cq, "cs": cs, "r": rq, "rs": rs}
+    else:
+        raise NotImplementedError(
+            f"chunked prefill supports attn/mla mixers, got {meta.mixer!r} — "
+            "ssm/cross state is sequential, not per-page; serve such models "
+            "through the flat generate() path")
+    x = x + mix
+    if meta.ffn != "none":
+        h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+        if meta.ffn == "dense":
+            y = apply_dense_ffn(p["ffn"], h)
+        else:
+            y, _ = _routed_moe(p["ffn"], cfg, h, LOCAL)
+            if "shared" in p["ffn"]:
+                t = h.shape[1]
+                y = y + apply_dense_ffn(
+                    p["ffn"]["shared"], h.reshape(b * t, -1)
+                ).reshape(b, t, -1)
+        x = x + y
+    return x, cache
+
+
 def capture_block(p, cfg, meta: BlockMeta, x, *, positions=None, media=None):
     """Calibration forward of one block for the RSQ pipeline.
 
@@ -653,20 +795,7 @@ class Model:
             # only sequence-indexed entries (self-attn KV, MLA latents) grow;
             # quantized caches also carry scale rows — the codec's
             # ``scale_rows`` (s is already a chunk multiple)
-            codec = self.codec
-
-            def f(key, a):
-                if key in ("k", "v", "c", "r"):
-                    tgt = s
-                elif key in ("ks", "vs", "cs", "rs"):
-                    tgt = codec.scale_rows(s)
-                else:
-                    return a
-                pad = [(0, 0)] * a.ndim
-                pad[1] = (0, tgt - a.shape[1])
-                return jnp.pad(a, pad)
-            return {k: (f(k, v) if not isinstance(v, (dict, tuple)) else v)
-                    for k, v in c.items()}
+            return pad_cache_entry(c, self.codec, s)
 
         caches_prefix = []
         for p_blk, meta in zip(params.get("prefix", []), self.prefix_metas):
@@ -826,6 +955,123 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = self.head_logits(params, x[:, 0])
         return logits, new_pools
+
+    # ------------------------------------------------------- chunked prefill
+    def init_ingest(self, t_total: int):
+        """Transient fp prefix buffers for exact chunked prefill of ONE
+        request of prompt length ``t_total``.
+
+        GQA blocks keep the post-rope K/V rows, MLA blocks the *expanded*
+        per-head K/V (flash_attention's operands), so each chunk's
+        attention replays the flat prefill bitwise — see
+        :func:`ingest_block`.  The buffers live only while the request is
+        ingesting; the steady-state cache representation stays quantized
+        pages."""
+        cfg = self.cfg
+        dt = self.dtype
+        kvh, dh = cfg.n_kv_heads, cfg.head_dim
+
+        def entry(meta: BlockMeta):
+            if meta.mixer == "attn":
+                return {"k": jnp.zeros((1, t_total, kvh, dh), dt),
+                        "v": jnp.zeros((1, t_total, kvh, dh), dt)}
+            if meta.mixer == "mla":
+                dq = cfg.qk_nope_dim + cfg.qk_rope_dim
+                return {"k": jnp.zeros((1, t_total, cfg.n_heads, dq), dt),
+                        "v": jnp.zeros((1, t_total, cfg.n_heads,
+                                        cfg.v_head_dim), dt)}
+            raise NotImplementedError(
+                f"chunked prefill supports attn/mla mixers, got "
+                f"{meta.mixer!r}")
+
+        def stack(e):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_groups,) + a.shape), e)
+
+        state = {"groups": {f"b{i}": stack(entry(self.group_metas[i]))
+                            for i in range(self.period)}}
+        if self.prefix_metas:
+            state["prefix"] = [entry(m) for m in self.prefix_metas]
+        return state
+
+    def paged_extend_step(self, params, tokens, start, state, *,
+                          t_total: int, last: bool, pools=None,
+                          page_tbl=None):
+        """Ingest one page-aligned prompt chunk of one request.
+
+        tokens: (1, L) i32 chunk tokens; start: () i32 chunk offset
+        (multiple of the page size); ``state``: fp prefix buffers from
+        :meth:`init_ingest` (exact mode) — or None with ``pools`` +
+        ``page_tbl`` (the request's already-written pages, (n_past,) i32)
+        for the opt-in paged mode that attends earlier chunks' quantized
+        pages through the extend kernels.  Returns
+        (logits, new_state, chunk_cache): logits (1, V) when ``last`` else
+        None — the same draw whole-prompt prefill would produce; and
+        chunk_cache in prefill-cache layout, padded to a page multiple,
+        ready for ``PagedPools.write_prefill`` on the chunk's pages."""
+        cfg = self.cfg
+        _, L = tokens.shape
+        s_pad = self._cache_len(L)
+        x = embed_lookup(params["embed"], tokens).astype(self.dtype)
+        positions = start + jnp.arange(L)
+        exact = state is not None
+
+        caches_prefix = []
+        new_prefix = []
+        for p_blk, meta, c in zip(params.get("prefix", []),
+                                  self.prefix_metas,
+                                  (state or pools).get("prefix", [])):
+            if exact:
+                x, nb, cc = ingest_block(p_blk, cfg, meta, x, c, start,
+                                         positions, t_total)
+                new_prefix.append(nb)
+            else:
+                x, cc = paged_extend_block(p_blk, cfg, meta, x, c, page_tbl,
+                                           start, positions)
+            caches_prefix.append(pad_cache_entry(cc, self.codec, s_pad))
+
+        if exact:
+            def body(x, xs):
+                gp, gb = xs
+                new_gb, caches = {}, {}
+                for i in range(self.period):
+                    x, nb, cc = ingest_block(gp[f"b{i}"], cfg,
+                                             self.group_metas[i], x,
+                                             gb[f"b{i}"], start, positions,
+                                             t_total)
+                    new_gb[f"b{i}"] = nb
+                    caches[f"b{i}"] = pad_cache_entry(cc, self.codec, s_pad)
+                return x, (new_gb, caches)
+
+            x, (new_groups, group_caches) = jax.lax.scan(
+                body, x, (params["groups"], state["groups"]))
+            new_state = {"groups": new_groups}
+            if new_prefix:
+                new_state["prefix"] = new_prefix
+        else:
+            def body(x, xs):
+                gp, gpools = xs
+                caches = {}
+                for i in range(self.period):
+                    x, cc = paged_extend_block(gp[f"b{i}"], cfg,
+                                               self.group_metas[i], x,
+                                               gpools[f"b{i}"], page_tbl,
+                                               start, positions)
+                    caches[f"b{i}"] = pad_cache_entry(cc, self.codec, s_pad)
+                return x, caches
+
+            x, group_caches = jax.lax.scan(
+                body, x, (params["groups"], pools["groups"]))
+            new_state = None
+
+        chunk_cache = {"groups": group_caches}
+        if caches_prefix:
+            chunk_cache["prefix"] = caches_prefix
+        logits = None
+        if last:
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = self.head_logits(params, x[:, -1])
+        return logits, new_state, chunk_cache
 
 
 def build_model(cfg: ModelConfig, ctx: ParallelCtx = LOCAL) -> Model:

@@ -22,9 +22,18 @@ fixed-batch loop included).
 Admission policy: pages for the *whole* request (prompt + max_new_tokens,
 rounded up to whole pages) are reserved at admission — a running request
 can never hit the allocator mid-flight, so there is no preemption/swap
-path to get wrong.  Admission is whole-prompt (one prefill dispatch per
-request, like the flat path — bit-identity is the reason chunked
-admission is not the default).
+path to get wrong.  With ``prefill_chunk=None`` admission is whole-prompt
+(one prefill dispatch per request, stalling the decode batch for the full
+prompt).  With ``prefill_chunk=N`` (rounded up to a page multiple) the
+prompt is ingested chunk by chunk, one chunk per scheduling round per
+ingesting slot, *interleaved* with decode bursts — the running batch
+keeps emitting while long prompts stream in, and every queued request
+that holds a slot advances each round (batched admission).  The default
+``prefill_attn="exact"`` mode keeps transient fp K/V prefix buffers per
+ingesting request so every chunk replays the flat prefill bitwise — the
+determinism contract holds unchanged; ``prefill_attn="paged"`` instead
+re-reads earlier chunks from their quantized pages through the paged
+extend kernels (HBM-cheap, but lossy versus the flat prefill — opt-in).
 """
 from __future__ import annotations
 
@@ -77,15 +86,42 @@ class RequestOutput:
     prompt_len: int
     submit_time: float
     finish_time: float
+    first_token_time: float = 0.0
 
     @property
     def latency(self) -> float:
         return self.finish_time - self.submit_time
 
+    @property
+    def ttft(self) -> float:
+        """Time to first token: submit -> the round that sampled token 0
+        from the (last chunk of the) prefill."""
+        return self.first_token_time - self.submit_time
+
 
 @functools.lru_cache(maxsize=64)
 def _prefill_fn(model, cache_len: int):
     return jax.jit(lambda p, x: model.prefill(p, x, cache_len=cache_len))
+
+
+@functools.lru_cache(maxsize=64)
+def _extend_fn(model, t_total: int, last: bool):
+    """One exact-mode chunk step: fp prefix buffers donated through."""
+    return jax.jit(
+        lambda p, x, start, state: model.paged_extend_step(
+            p, x, start, state, t_total=t_total, last=last),
+        donate_argnums=(3,))
+
+
+@functools.lru_cache(maxsize=64)
+def _extend_paged_fn(model, t_total: int, last: bool):
+    """One paged-mode chunk step: reads the request's quantized pages."""
+    def run(p, x, start, pools, tbl):
+        logits, _, cc = model.paged_extend_step(
+            p, x, start, None, t_total=t_total, last=last, pools=pools,
+            page_tbl=tbl)
+        return logits, cc
+    return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=16)
@@ -135,7 +171,8 @@ class Engine:
 
     def __init__(self, model, params, *, max_slots: int = 4,
                  n_pages: int = 64, max_pages_per_request: int = 8,
-                 burst_steps: int = 8):
+                 burst_steps: int = 8, prefill_chunk: Optional[int] = None,
+                 prefill_attn: str = "exact"):
         cfg = model.cfg
         metas = tuple(model.prefix_metas) + tuple(model.group_metas)
         bad = sorted({m.mixer for m in metas} - {"attn", "mla"})
@@ -154,6 +191,10 @@ class Engine:
                 "the engine is meshless — it owns the batch axis and the "
                 "paged kernels take no shard_map route; build the model "
                 "with the LOCAL ctx for serving")
+        if prefill_attn not in ("exact", "paged"):
+            raise ValueError(
+                f"prefill_attn must be 'exact' or 'paged', got "
+                f"{prefill_attn!r}")
         self.model = model
         self.params = params
         self.pools = PagedPools(model, n_pages)  # validates kv_bits
@@ -161,6 +202,15 @@ class Engine:
         self.max_slots = max_slots
         self.max_pages = max_pages_per_request
         self.burst_steps = burst_steps
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            # chunk boundaries must be page-aligned (a kv2 scale group
+            # never straddles a chunk, and chunk pages scatter whole)
+            prefill_chunk = -(-prefill_chunk // self.page) * self.page
+        self.prefill_chunk = prefill_chunk
+        self.prefill_attn = prefill_attn
 
         # per-slot scheduling state lives on the HOST: admission writes a
         # handful of scalars per request, and as numpy rows that is free —
@@ -184,8 +234,11 @@ class Engine:
         self._slot_pages = [None] * b        # np page ids of each slot
         self._slot_tokens = [None] * b       # emitted tokens (host)
         self._slot_req = [None] * b
+        self._ingest = [None] * b            # chunked-prefill progress
         self._submit_time = {}
+        self._first_token_time = {}
         self._outputs = []
+        self.admission_stall_s = 0.0
 
     # ------------------------------------------------------------------ API
     def submit(self, request: ServeRequest) -> int:
@@ -199,9 +252,14 @@ class Engine:
                 f" but the page table holds {self.max_pages} per request — "
                 "raise max_pages_per_request or split the request")
         if need > self.pools.n_pages:
-            raise ValueError(
-                f"request needs {need} pages but the pool only has "
-                f"{self.pools.n_pages} — raise n_pages")
+            # fail fast with the allocator's own sizing math: this request
+            # can never fit even an empty pool, so queueing it would only
+            # defer the same failure to admission time
+            raise self.pools.exhausted(
+                need, have=self.pools.n_pages,
+                context=f" (submit: {len(request.tokens)} prompt + "
+                        f"{request.max_new_tokens} new tokens can never "
+                        f"fit)")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, request))
@@ -210,17 +268,27 @@ class Engine:
 
     def step(self) -> list:
         """One scheduling round: admit queued requests into free slots,
-        run one decode burst over the live batch, retire the finished.
-        Returns the requests that finished this round."""
+        advance every ingesting slot by one prompt chunk, run one decode
+        burst over the live batch, retire the finished.  Returns the
+        requests that finished this round."""
+        t0 = time.time()
         self._admit()
+        self._advance_ingest()
+        self.admission_stall_s += time.time() - t0
         if self.act.any():
             self._burst()
         return self._retire()
 
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued, ingesting, or decoding."""
+        return (bool(self._queue) or bool(self.act.any())
+                or any(i is not None for i in self._ingest))
+
     def drain(self) -> list:
         """Run ``step()`` until every submitted request has finished."""
         out = []
-        while self._queue or self.act.any():
+        while self.busy:
             out.extend(self.step())
         return out
 
@@ -244,7 +312,11 @@ class Engine:
                 self.pools.alloc(need, context=f" (request {rid})")
             self._queue.popleft()
             ids = self.pools.alloc(need, context=f" (request {rid})")
-            self._start(slot, rid, req, ids)
+            if (self.prefill_chunk is not None
+                    and len(req.tokens) > self.prefill_chunk):
+                self._start_chunked(slot, rid, req, ids)
+            else:
+                self._start(slot, rid, req, ids)
 
     def _start(self, slot: int, rid: int, req: ServeRequest, ids) -> None:
         t = len(req.tokens)
@@ -253,24 +325,93 @@ class Engine:
         logits, cache = _prefill_fn(self.model, t)(self.params, prompt)
         n_pp = -(-self.model._cache_len(t) // self.page)
         self.pools.write_prefill(cache, ids[:n_pp])
-        # token 0 from the prefill logits — the exact draw generate() makes
-        key = jax.random.key(sp.seed)
-        if sp.temperature > 0:
-            tok0 = int(jax.random.categorical(
-                jax.random.fold_in(key, 0),
-                logits / jnp.float32(sp.temperature), axis=-1)[0])
-        else:
-            tok0 = int(jnp.argmax(logits, -1)[0])
+        tok0 = self._sample_token0(logits, sp)
+        self._first_token_time[rid] = time.time()
         ids_np = np.asarray(ids)
         self._slot_rid[slot] = rid
         self._slot_pages[slot] = ids_np
         self._slot_tokens[slot] = [tok0]
         self._slot_req[slot] = req
-        done0 = (req.max_new_tokens == 1 or tok0 == sp.eos_token)
         self.tbl[slot] = 0
         self.tbl[slot, :len(ids_np)] = ids_np
+        self._arm_decode(slot, req, tok0)
+
+    def _start_chunked(self, slot: int, rid: int, req: ServeRequest,
+                       ids) -> None:
+        """Claim a slot for chunk-by-chunk ingestion: pages are reserved
+        and the slot occupied, but no prefill compute happens here — each
+        ``step()`` advances the slot one chunk via ``_advance_ingest``
+        (the slot's ``act`` stays False until its last chunk samples
+        token 0)."""
+        t = len(req.tokens)
+        ids_np = np.asarray(ids)
+        self._slot_rid[slot] = rid
+        self._slot_pages[slot] = ids_np
+        self._slot_tokens[slot] = []
+        self._slot_req[slot] = req
+        self.tbl[slot] = 0
+        self.tbl[slot, :len(ids_np)] = ids_np
+        state = (self.model.init_ingest(t)
+                 if self.prefill_attn == "exact" else None)
+        self._ingest[slot] = {"start": 0, "state": state}
+
+    def _advance_ingest(self) -> None:
+        """Advance every ingesting slot by ONE prompt chunk — batched
+        admission: the per-round ingest cost is one chunk per queued
+        request, never a whole prompt, so decode bursts stay interleaved
+        with long-prompt arrivals."""
+        for s in range(self.max_slots):
+            ing = self._ingest[s]
+            if ing is None:
+                continue
+            req = self._slot_req[s]
+            t = len(req.tokens)
+            start = ing["start"]
+            n = min(self.prefill_chunk, t - start)
+            last = start + n >= t
+            chunk = jnp.asarray(req.tokens[start:start + n], jnp.int32)[None]
+            if ing["state"] is not None:
+                logits, state, cc = _extend_fn(self.model, t, last)(
+                    self.params, chunk, jnp.int32(start), ing["state"])
+            else:
+                tbl = jnp.asarray(self._slot_pages[s][:start // self.page],
+                                  jnp.int32)
+                logits, cc = _extend_paged_fn(self.model, t, last)(
+                    self.params, chunk, jnp.int32(start), self.pools.pools,
+                    tbl)
+                state = None
+            n_cp = -(-n // self.page)
+            first = start // self.page
+            self.pools.write_prefill(
+                cc, jnp.asarray(self._slot_pages[s][first:first + n_cp],
+                                jnp.int32))
+            if not last:
+                ing["start"] = start + n
+                ing["state"] = state
+                continue
+            rid = self._slot_rid[s]
+            tok0 = self._sample_token0(logits, req.sampling)
+            self._first_token_time[rid] = time.time()
+            self._slot_tokens[s] = [tok0]
+            self._ingest[s] = None
+            self._arm_decode(s, req, tok0)
+
+    def _sample_token0(self, logits, sp: SamplingParams) -> int:
+        """Token 0 from the prefill logits — the exact draw generate()
+        makes (``fold_in(key(seed), 0)``), shared by whole-prompt and
+        chunked admission."""
+        if sp.temperature > 0:
+            return int(jax.random.categorical(
+                jax.random.fold_in(jax.random.key(sp.seed), 0),
+                logits / jnp.float32(sp.temperature), axis=-1)[0])
+        return int(jnp.argmax(logits, -1)[0])
+
+    def _arm_decode(self, slot: int, req: ServeRequest, tok0: int) -> None:
+        """Write the slot's decode-time sampling state rows after token 0."""
+        sp = req.sampling
+        done0 = (req.max_new_tokens == 1 or tok0 == sp.eos_token)
         self.tok[slot, 0] = tok0
-        self.pos[slot] = t
+        self.pos[slot] = len(req.tokens)
         self.nem[slot] = 1
         self.act[slot] = not done0
         self.temp[slot] = sp.temperature
@@ -289,7 +430,7 @@ class Engine:
         self.nem, self.act = np.array(nem), np.array(act)
         toks, em = np.asarray(toks), np.asarray(em)
         for s in range(self.max_slots):
-            if self._slot_rid[s] is None:
+            if self._slot_rid[s] is None or self._ingest[s] is not None:
                 continue
             self._slot_tokens[s].extend(int(t)
                                         for t in toks[em[:, s], s])
@@ -298,7 +439,7 @@ class Engine:
         finished = []
         for s in range(self.max_slots):
             rid = self._slot_rid[s]
-            if rid is None or self.act[s]:
+            if rid is None or self.act[s] or self._ingest[s] is not None:
                 continue
             self.pools.release(self._slot_pages[s])
             req = self._slot_req[s]
@@ -307,7 +448,8 @@ class Engine:
                 tokens=self._slot_tokens[s][:req.max_new_tokens],
                 prompt_len=len(req.tokens),
                 submit_time=self._submit_time.pop(rid),
-                finish_time=time.time())
+                finish_time=time.time(),
+                first_token_time=self._first_token_time.pop(rid, 0.0))
             finished.append(out)
             self._outputs.append(out)
             self._slot_rid[s] = self._slot_pages[s] = None

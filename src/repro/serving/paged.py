@@ -107,17 +107,25 @@ class PagedPools:
         return sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree.leaves(self.pools))
 
+    def exhausted(self, n: int, *, context: str = "",
+                  have: int | None = None) -> "PageAllocatorExhausted":
+        """Build the actionable sizing error for an allocation of ``n``
+        pages that cannot be satisfied — shared by ``alloc`` (runtime
+        exhaustion) and ``Engine.submit`` (fail-fast on requests that can
+        never fit, where ``have`` is the pool capacity)."""
+        have = self.free_pages() if have is None else have
+        return PageAllocatorExhausted(
+            f"page allocator exhausted{context}: need {n} pages, "
+            f"{have} of {self.n_pages} free (page = {self.page} "
+            f"tokens).  Retire requests, raise n_pages (one page is "
+            f"~{self.page_bytes() / 1e3:.1f}KB across all layers), or "
+            f"lower max_new_tokens/prompt lengths.")
+
     def alloc(self, n: int, *, context: str = "") -> jax.Array:
         """Reserve ``n`` pages; raises with the actionable sizing math on
         exhaustion (the caller retires requests to make progress)."""
-        have = self.free_pages()
-        if n > have:
-            raise PageAllocatorExhausted(
-                f"page allocator exhausted{context}: need {n} pages, "
-                f"{have} of {self.n_pages} free (page = {self.page} "
-                f"tokens).  Retire requests, raise n_pages (one page is "
-                f"~{self.page_bytes() / 1e3:.1f}KB across all layers), or "
-                f"lower max_new_tokens/prompt lengths.")
+        if n > self.free_pages():
+            raise self.exhausted(n, context=context)
         self.top, ids = _alloc(self.free, self.top, n)
         return ids
 

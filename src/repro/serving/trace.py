@@ -31,13 +31,16 @@ def run_trace(engine, trace):
     """Drive the engine through an arrival trace to completion.
 
     Submits each event at its scheduled round, then keeps stepping until
-    everything drains.  Returns a summary dict: outputs (by request id),
-    wall-clock p50/p99 request latency, total emitted tokens and the
-    sustained tok/s over the whole run (first submit -> last finish)."""
+    everything drains (``engine.busy`` covers queued, *ingesting* — a
+    chunked-prefill slot is live but not yet decoding — and decoding
+    requests).  Returns a summary dict: outputs (by request id),
+    wall-clock p50/p99 request latency and time-to-first-token, total
+    emitted tokens, the sustained tok/s over the whole run (first submit
+    -> last finish) and the engine's cumulative admission stall."""
     events = sorted(trace, key=lambda e: e.step)
     outputs, i, round_ix = [], 0, 0
     t0 = time.time()
-    while i < len(events) or engine._queue or engine.act.any():
+    while i < len(events) or engine.busy:
         while i < len(events) and events[i].step <= round_ix:
             engine.submit(events[i].request)
             i += 1
@@ -45,6 +48,7 @@ def run_trace(engine, trace):
         round_ix += 1
     wall = time.time() - t0
     lats = np.array([o.latency for o in outputs]) if outputs else np.zeros(1)
+    ttfts = np.array([o.ttft for o in outputs]) if outputs else np.zeros(1)
     n_tok = sum(len(o.tokens) for o in outputs)
     return {
         "outputs": {o.request_id: o for o in outputs},
@@ -54,5 +58,8 @@ def run_trace(engine, trace):
         "sustained_tok_s": n_tok / max(wall, 1e-9),
         "p50_latency_s": float(np.percentile(lats, 50)),
         "p99_latency_s": float(np.percentile(lats, 99)),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        "admission_stall_s": float(getattr(engine, "admission_stall_s", 0.0)),
         "rounds": round_ix,
     }

@@ -9,6 +9,16 @@ perturb later requests), and the paged kernels' tile-indirect loop
 against the flat kernels at partial-tile positions.  The paged path must
 also never materialize an fp copy of the cache (codes+scales end to
 end), and the page allocator must fail actionably, not opaquely.
+
+PR 9 (chunked prefill) extends the contract: admission with
+``prefill_chunk=N`` streams prompts in page-aligned chunks interleaved
+with decode bursts, and the default exact mode must keep every stream
+bitwise identical to the solo batch-1 ``generate`` — including prompts
+spanning several pages with a partial final chunk.  The paged-extend
+kernels are pinned bitwise against their refs (GQA + MLA × kv8/kv2,
+empty/partial-chunk edges), ``submit`` fails fast with the sizing math
+when a request can never fit, and ``generate_batch`` now warns that the
+engine supersedes it.
 """
 import dataclasses
 import functools
@@ -23,8 +33,8 @@ from repro.data.synthetic import SyntheticCorpus
 from repro.launch.serve import generate, generate_batch
 from repro.models import attention as att
 from repro.models import build_model
-from repro.serving import (Engine, PagedPools, SamplingParams, ServeRequest,
-                           poisson_trace, run_trace)
+from repro.serving import (Engine, PagedPools, RequestOutput, SamplingParams,
+                           ServeRequest, poisson_trace, run_trace)
 from repro.serving.paged import PageAllocatorExhausted
 
 PAIRS = [("qwen1.5-4b", 8), ("qwen1.5-4b", 2),
@@ -158,10 +168,18 @@ def test_allocator_exhaustion_is_actionable():
     big = ServeRequest(tokens=list(range(2 * page)), max_new_tokens=page)
     with pytest.raises(ValueError, match="max_pages_per_request"):
         engine.submit(big)
+    # submit fails fast with the sizing math when prompt + budget can
+    # never fit the pool, even one with every page free (PR 9): the
+    # request must be rejected at submission, not after it has queued
+    # behind requests that will never unblock it
     wide = Engine(model, params, max_slots=2, n_pages=2,
                   max_pages_per_request=8, burst_steps=2)
-    with pytest.raises(ValueError, match="raise n_pages"):
+    with pytest.raises(PageAllocatorExhausted) as ei:
         wide.submit(big)
+    msg = str(ei.value)
+    assert "can never fit" in msg and "need 3 pages" in msg
+    assert "raise n_pages" in msg  # the actionable sizing advice
+    assert f"{2 * page} prompt" in msg and f"{page} new tokens" in msg
 
     # kv_bits=0 has no code/scale layout to page
     fp_model, _ = _model_params("qwen1.5-4b", 0)
@@ -374,3 +392,209 @@ def test_paged_mla_matches_flat_bitwise(kv_bits, use_kernel):
         ref = acc / jnp.maximum(l, 1e-30)
         assert jnp.array_equal(paged[bb], ref[bb]), \
             f"request {bb} not bitwise equal (kernel={use_kernel})"
+
+
+# -------------------------------------------- chunked prefill (PR 9)
+
+
+def _extend_pools(codec, x, pages, n_pages, page):
+    """Encode a flat past and scatter it into shuffled pages; returns the
+    (n_pages, page, ...) code pool and its scale pool.  ``x`` is the full
+    fp past (batch 1); pages beyond ``pages`` stay zero (trash-shaped)."""
+    codes, scales = codec.encode(x)
+    cp = jnp.zeros((n_pages, page) + codes.shape[2:], codes.dtype)
+    sr = page // codec.chunk
+    sp = jnp.zeros((n_pages, sr) + scales.shape[2:], scales.dtype)
+    for t, pid in enumerate(pages):
+        cp = cp.at[pid].set(codes[0, t * page:(t + 1) * page])
+        sp = sp.at[pid].set(scales[0, t * sr:(t + 1) * sr])
+    return cp, sp
+
+
+@pytest.mark.parametrize("kv_bits", [8, 2])
+@pytest.mark.parametrize("n_past,L", [(0, 17), (2, 30), (2, 64)])
+def test_paged_gqa_extend_kernel_matches_ref_bitwise(kv_bits, n_past, L):
+    """The extend kernel's tile loop (quantized past pages + causal fp
+    within-chunk tile) must match its ref bitwise at every edge: no past
+    pages, a partial final chunk, and a full page-multiple chunk."""
+    from repro.kernels.flash_decode import (paged_flash_extend_pallas,
+                                            paged_flash_extend_ref)
+
+    page, kv, g, dh = 64, 2, 2, 16
+    codec = att.kv_codec(kv_bits, page)
+    keys = jax.random.split(jax.random.key(11), 5)
+    s_past = max(n_past, 1) * page  # >= 1 page so pool shapes exist
+    kx, vx = (jax.random.normal(k, (1, s_past, kv, dh), jnp.float32)
+              for k in keys[:2])
+    pages = [3, 1, 5][:n_past]
+    kqp, ksp = _extend_pools(codec, kx, pages, 6, page)
+    vqp, vsp = _extend_pools(codec, vx, pages, 6, page)
+    q = jax.random.normal(keys[2], (1, L, kv * g, dh), jnp.float32)
+    k_new, v_new = (jax.random.normal(k, (1, L, kv, dh), jnp.float32)
+                    for k in keys[3:])
+    tbl = jnp.asarray(pages, jnp.int32)
+    start = jnp.int32(n_past * page)
+    kw = dict(kv_bits=kv_bits, chunk=codec.chunk, dh=dh, dv=dh, page=page)
+    ref = paged_flash_extend_ref(tbl, q, k_new, v_new, kqp, ksp, vqp, vsp,
+                                 start, **kw)
+    ker = paged_flash_extend_pallas(tbl, q, k_new, v_new, kqp, ksp, vqp,
+                                    vsp, start, interpret=True, **kw)
+    assert ker.shape == (1, L, kv * g, dh)
+    assert jnp.array_equal(ker, ref), \
+        f"extend kernel != ref (kv_bits={kv_bits}, n_past={n_past}, L={L})"
+
+
+@pytest.mark.parametrize("kv_bits", [8, 2])
+@pytest.mark.parametrize("n_past,L", [(0, 17), (2, 30), (2, 64)])
+def test_paged_mla_extend_kernel_matches_ref_bitwise(kv_bits, n_past, L):
+    from repro.kernels.flash_decode import (paged_mla_flash_extend_pallas,
+                                            paged_mla_flash_extend_ref)
+
+    page, h, dl, dr = 64, 2, 32, 16
+    codec = att.kv_codec(kv_bits, page)
+    keys = jax.random.split(jax.random.key(13), 6)
+    s_past = max(n_past, 1) * page
+    cx = jax.random.normal(keys[0], (1, s_past, dl), jnp.float32)
+    rx = jax.random.normal(keys[1], (1, s_past, dr), jnp.float32)
+    pages = [3, 1, 5][:n_past]
+    cqp, csp = _extend_pools(codec, cx, pages, 6, page)
+    rqp, rsp = _extend_pools(codec, rx, pages, 6, page)
+    ql = jax.random.normal(keys[2], (L, h, dl), jnp.float32)
+    qr = jax.random.normal(keys[3], (L, h, dr), jnp.float32)
+    c_new = jax.random.normal(keys[4], (L, dl), jnp.float32)
+    r_new = jax.random.normal(keys[5], (L, dr), jnp.float32)
+    tbl = jnp.asarray(pages, jnp.int32)
+    start = jnp.int32(n_past * page)
+    kw = dict(kv_bits=kv_bits, chunk=codec.chunk, dl=dl, dr=dr, page=page)
+    ref = paged_mla_flash_extend_ref(tbl, ql, qr, c_new, r_new, cqp, csp,
+                                     rqp, rsp, start, **kw)
+    ker = paged_mla_flash_extend_pallas(tbl, ql, qr, c_new, r_new, cqp,
+                                        csp, rqp, rsp, start,
+                                        interpret=True, **kw)
+    assert ker.shape == (L, h, dl)
+    assert jnp.array_equal(ker, ref), \
+        f"MLA extend kernel != ref (kv_bits={kv_bits}, " \
+        f"n_past={n_past}, L={L})"
+
+
+@pytest.mark.parametrize("name,kv_bits", PAIRS)
+def test_chunked_prefill_bit_identical_to_single_request(name, kv_bits):
+    """Chunked admission (prefill_chunk=64, 150-token prompts spanning
+    three pages with a partial final chunk) must keep every stream
+    bitwise identical to the solo batch-1 ``generate`` — the exact-mode
+    fp prefix buffers replay the flat prefill's tiles, so streaming the
+    prompt through the running decode batch changes scheduling, never
+    tokens.  TTFT/stall accounting and page hygiene ride along."""
+    model, params = _model_params(name, kv_bits)
+    prompts = _prompts(model, 3, 150)
+    sps = [SamplingParams(), SamplingParams(temperature=1.3, seed=7),
+           SamplingParams()]
+    budgets = [12, 9, 7]
+    expected = [_baseline(model, params, prompts[i].tolist(), budgets[i],
+                          sps[i])
+                for i in range(3)]
+    engine = Engine(model, params, max_slots=2, n_pages=16,
+                    max_pages_per_request=3, burst_steps=4,
+                    prefill_chunk=64)
+    rids = [engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                       max_new_tokens=budgets[i],
+                                       sampling=sps[i]))
+            for i in range(3)]
+    outs = {o.request_id: o for o in engine.drain()}
+    assert sorted(outs) == sorted(rids)
+    for i, rid in enumerate(rids):
+        assert outs[rid].tokens == expected[i], \
+            f"request {i}: {outs[rid].tokens} != {expected[i]}"
+        assert outs[rid].ttft > 0
+        assert outs[rid].latency >= outs[rid].ttft
+    assert engine.pools.free_pages() == 16, "pages leaked after drain"
+    assert engine.admission_stall_s > 0
+
+
+def test_chunked_prefill_paged_attention_mode_drains():
+    """The opt-in ``prefill_attn="paged"`` mode re-reads earlier chunks
+    from their quantized pages (documented lossy vs the flat prefill, so
+    no bit-identity claim): it must admit, decode and retire cleanly
+    with page hygiene intact."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    prompts = _prompts(model, 2, 150)
+    engine = Engine(model, params, max_slots=2, n_pages=8,
+                    max_pages_per_request=3, burst_steps=4,
+                    prefill_chunk=64, prefill_attn="paged")
+    for i in range(2):
+        engine.submit(ServeRequest(tokens=prompts[i].tolist(),
+                                   max_new_tokens=6))
+    outs = engine.drain()
+    assert len(outs) == 2 and all(len(o.tokens) == 6 for o in outs)
+    assert engine.pools.free_pages() == 8
+
+    with pytest.raises(ValueError, match="prefill_attn"):
+        Engine(model, params, max_slots=2, n_pages=8,
+               max_pages_per_request=3, prefill_chunk=64,
+               prefill_attn="bogus")
+
+
+def test_generate_batch_is_deprecated():
+    """``generate_batch`` survives as a thin compatibility wrapper but
+    must warn that the engine supersedes it."""
+    model, params = _model_params("qwen1.5-4b", 8)
+    prompts = _prompts(model, 1, 12)
+    req = ServeRequest(tokens=prompts[0].tolist(), max_new_tokens=2)
+    with pytest.warns(DeprecationWarning, match="serving.Engine"):
+        generate_batch(model, params, [req])
+
+
+# ------------------------------------------------------- trace driver
+
+
+def test_poisson_trace_deterministic_under_seed():
+    """Fixed seed -> bitwise-identical arrival schedule (the bench's
+    whole/chunked admission comparison depends on both engine runs
+    seeing the same trace); different seeds -> different schedules."""
+    reqs = [ServeRequest(tokens=[1], max_new_tokens=1)] * 16
+    a = poisson_trace(reqs, rate=0.7, seed=11)
+    b = poisson_trace(reqs, rate=0.7, seed=11)
+    assert [e.step for e in a] == [e.step for e in b]
+    assert [e.step for e in a] == sorted(e.step for e in a)
+    c = poisson_trace(reqs, rate=0.7, seed=12)
+    assert [e.step for e in c] != [e.step for e in a]
+
+
+def test_run_trace_percentiles_on_hand_built_outputs():
+    """The summary's p50/p99 latency, ttft percentiles and stall fields
+    are plain ``np.percentile`` over per-request wall times — pinned on a
+    stub engine emitting hand-built outputs with known timestamps."""
+    outs = [RequestOutput(request_id=i, tokens=list(range(i + 1)),
+                          prompt_len=4, submit_time=0.0,
+                          finish_time=float(i + 1),
+                          first_token_time=0.25 * (i + 1))
+            for i in range(5)]
+
+    class Stub:
+        admission_stall_s = 0.125
+
+        def __init__(self, pending):
+            self._pending = list(pending)
+
+        def submit(self, req):
+            pass
+
+        @property
+        def busy(self):
+            return bool(self._pending)
+
+        def step(self):
+            return [self._pending.pop(0)] if self._pending else []
+
+    reqs = [ServeRequest(tokens=[1], max_new_tokens=1)] * 5
+    stats = run_trace(Stub(outs), poisson_trace(reqs, rate=2.0, seed=0))
+    lats = [1.0, 2.0, 3.0, 4.0, 5.0]
+    ttfts = [0.25 * (i + 1) for i in range(5)]
+    assert stats["n_requests"] == 5
+    assert stats["n_tokens"] == 15
+    assert stats["p50_latency_s"] == pytest.approx(np.percentile(lats, 50))
+    assert stats["p99_latency_s"] == pytest.approx(np.percentile(lats, 99))
+    assert stats["ttft_p50_s"] == pytest.approx(np.percentile(ttfts, 50))
+    assert stats["ttft_p99_s"] == pytest.approx(np.percentile(ttfts, 99))
+    assert stats["admission_stall_s"] == 0.125
+    assert stats["p99_latency_s"] > stats["p50_latency_s"]
