@@ -90,7 +90,10 @@ def check_serve_ratio(fresh: dict) -> list[str]:
     packed-slower-than-fp decode fails).  The ``long_context`` leg's
     quantized-KV ``decode_vs_fp_ratio`` fields (PR 7), the engine leg's
     ``sustained_vs_fixed_ratio`` (PR 8) and the chunked-admission ratios
-    (PR 9) are gated at the same tolerance when present."""
+    (PR 9) are gated at the same tolerance when present.  The overload
+    leg (PR 10) gates ``overload.all_terminal`` as a hard boolean —
+    terminality under oversubscription is a correctness invariant, not a
+    timing ratio."""
     try:
         ratio = fresh["packed"].get("decode_vs_fp_ratio")
         if ratio is None:
@@ -152,6 +155,16 @@ def check_serve_ratio(fresh: dict) -> list[str]:
             f"{float(r):.2f}x the whole-prompt p99 (tolerance "
             f"{SERVE_RATIO_TOL:.2f}x): chunked admission must not regress "
             "tail latency")
+    # overload terminality gate (PR 10): under 2x page oversubscription
+    # every submission must reach a definite terminal status — a request
+    # the engine dropped or wedged on is a correctness failure, not a
+    # timing ratio, so this is a hard boolean (no tolerance)
+    ovl = fresh.get("overload")
+    if isinstance(ovl, dict) and ovl.get("all_terminal") is not True:
+        bad.append(
+            "BENCH_serve.json: overload.all_terminal is not true — a "
+            "request never reached a terminal status under 2x "
+            "oversubscription (dropped or hung)")
     return bad
 
 

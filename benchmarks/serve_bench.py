@@ -69,6 +69,14 @@ both admission modes.  ``run.py`` gates ``chunked.chunked_vs_whole_ratio``
 ``chunked.p99_vs_whole_ratio`` (chunked over whole-prompt p99 latency)
 at the same SERVE_RATIO_TOL.
 
+PR 10 adds an **overload leg**: the engine again, but with the page pool
+halved against hot demand (2x oversubscription), a bounded queue and one
+expired deadline, recording the preemption / shed / deadline counters,
+per-status latency percentiles and p99 under overload.  Its gate is
+*terminality* — ``run.py`` fails when ``overload.all_terminal`` is false
+(a request that never reaches a definite status is a hang, not noise) —
+while the timing rides the generic ``steady_total_s`` gate.
+
 With >= 8 devices (CI's fake-8-device matrix entry) an extra **mesh leg**
 runs: a kernel-aligned model (every quantized d_out a multiple of
 128 x model-axis) is calibrated under a (2 data x 4 model) mesh, served
@@ -131,6 +139,17 @@ LC_LENGTHS = (512, 2048)
 ENG_N_REQ, ENG_PROMPT, ENG_SLOTS, ENG_PAGES = 12, 96, 4, 16
 ENG_BURST, ENG_BUDGETS, ENG_RATE, ENG_REPS = 8, (8, 8, 8, 128), 2.0, 5
 ENG_CHUNK = 64
+
+# overload leg (PR 10): the same engine with the page pool halved against
+# hot demand (max_slots x pages-per-request = 2 x n_pages), a bounded
+# queue and one sub-second deadline — preemption-and-requeue, shedding
+# and deadline expiry all fire on a real trace.  The leg's gate is
+# *terminality*: every submission must end in exactly one definite
+# status with the pool quiescent (run.py fails on all_terminal=False);
+# p99-under-overload and the preemption/shed counters are recorded
+# ungated (they are workload-shaped, not regression signals).
+OVL_N_REQ, OVL_BUDGET, OVL_RATE, OVL_REPS = 10, 32, 3.0, 2
+OVL_QUEUE_DEPTH = 6
 
 
 def _quantize_to_artifact(cfg, ctx=None, calib_rows=16, calib_len=64,
@@ -462,6 +481,75 @@ def _engine_leg() -> dict:
     }
 
 
+def _overload_leg() -> dict:
+    """The engine under 2x page oversubscription (serving PR 10).
+
+    Hot demand (``ENG_SLOTS`` x pages-per-request) is twice the pool, the
+    queue is bounded (``OVL_QUEUE_DEPTH``) and one request carries an
+    already-expired deadline, so a single Poisson trace exercises
+    preemption-and-requeue, backpressure shedding and deadline expiry at
+    once.  Scheduling is round-based and greedy, so the overload counters
+    are deterministic across reps/machines; the in-bench assertions (and
+    run.py's ``all_terminal`` gate) pin the robustness contract — every
+    submission terminal, pages quiescent, preemption actually exercised —
+    while the p99/wall numbers ride the usual advisory gates."""
+    from repro.configs import get_config
+    from repro.data.synthetic import SyntheticCorpus
+    from repro.models import build_model
+    from repro.serving import (Engine, SamplingParams, ServeRequest,
+                               poisson_trace, run_trace)
+
+    cfg = dataclasses.replace(
+        get_config(ARCH).reduced(), dtype="float32",
+        n_layers=N_LAYERS, d_model=D_MODEL, vocab_size=512, kv_bits=8)
+    model = build_model(cfg)
+    params = jax.jit(model.init)(jax.random.key(0))
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+    prompts = corpus.sample(jax.random.key(5), OVL_N_REQ, ENG_PROMPT)
+    page = model.codec.page_tokens
+    ppr = -(-(ENG_PROMPT + OVL_BUDGET) // page)
+    n_pages = ENG_SLOTS * ppr // 2  # hot demand = 2x the pool
+    reqs = [ServeRequest(tokens=prompts[i].tolist(),
+                         max_new_tokens=OVL_BUDGET,
+                         sampling=SamplingParams(
+                             deadline_s=1e-6 if i == 4 else 0.0))
+            for i in range(OVL_N_REQ)]
+
+    def one_run():
+        engine = Engine(model, params, max_slots=ENG_SLOTS,
+                        n_pages=n_pages, max_pages_per_request=ppr,
+                        burst_steps=ENG_BURST, queue_depth=OVL_QUEUE_DEPTH)
+        stats = run_trace(engine, poisson_trace(reqs, rate=OVL_RATE,
+                                                seed=0))
+        engine.pools.assert_quiescent()
+        return stats
+
+    one_run()  # compile pass, untimed
+    runs = [one_run() for _ in range(OVL_REPS)]
+    best = min(runs, key=lambda s: s["wall_s"])
+    all_terminal = all(s["n_requests"] == OVL_N_REQ for s in runs)
+    assert all_terminal, "a submission never reached a terminal status"
+    assert best["n_preemptions"] >= 1, "2x oversubscription must preempt"
+    assert best["n_deadline"] >= 1, "the expired deadline must retire"
+    return {
+        "n_requests": OVL_N_REQ, "prompt_len": ENG_PROMPT,
+        "budget": OVL_BUDGET, "max_slots": ENG_SLOTS,
+        "n_pages": n_pages, "pages_per_request": ppr,
+        "oversubscription": 2.0, "queue_depth": OVL_QUEUE_DEPTH,
+        "arrival_rate": OVL_RATE,
+        "all_terminal": all_terminal,
+        "n_preemptions": best["n_preemptions"],
+        "n_preempted_requests": best["n_preempted_requests"],
+        "shed_rate": round(best["n_shed"] / OVL_N_REQ, 4),
+        "n_deadline": best["n_deadline"],
+        "n_failed": best["n_failed"],
+        "statuses": best["statuses"],
+        "p99_latency_s": round(best["p99_latency_s"], 4),
+        "per_status": best["per_status"],
+        "steady_total_s": round(best["wall_s"], 4),
+    }
+
+
 def _mesh_leg() -> dict | None:
     """shard_map'd kernel serving on the fake multi-device mesh (CI's
     fake-8-device bench-guard entry): keep-packed generate with the
@@ -623,6 +711,13 @@ def run(table: Table | None = None):
               f"vs_whole={ch['chunked_vs_whole_ratio']} "
               f"ttft_p50={ch['ttft_p50_s']}s ttft_p99={ch['ttft_p99_s']}s "
               f"stall={ch['admission_stall_s']}s")
+    ovl = _overload_leg()
+    payload["overload"] = ovl
+    table.add("engine_overload", ovl["steady_total_s"] * 1e6,
+              f"2x oversub preempts={ovl['n_preemptions']} "
+              f"shed_rate={ovl['shed_rate']} "
+              f"deadline={ovl['n_deadline']} p99={ovl['p99_latency_s']}s "
+              f"all_terminal={ovl['all_terminal']}")
     mesh = _mesh_leg()
     if mesh is not None:
         payload["packed_mesh"] = mesh

@@ -73,6 +73,15 @@ Per-request token streams are bit-identical to a single-request
 store codes+scales, never fp.  See src/repro/serving/README.md for the
 API and the page-size math.
 
+Overload controls: ``--deadline-s`` retires expired requests with status
+``deadline_exceeded``, ``--queue-depth`` bounds the submission queue
+(rejected submissions are recorded as ``shed``), and ``--fail-at-round
+ROUND:STAGE[:COUNT]`` injects failures at the engine's scheduling stage
+points (admit/ingest/burst/retire) to exercise the retry/isolation path
+— under page pressure the engine preempts-and-requeues rather than
+stalling, and every preempted request's tokens stay bit-identical to its
+solo run (serving/README.md "Overload policy").
+
 ``--kernel-check`` is deprecated: the keep-packed forward now routes
 *every* projection through ``quant_matmul`` and the full-forward parity
 is pinned by tests/test_serve_packed.py.  The flag survives as a thin
@@ -84,6 +93,7 @@ error.
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import functools
 import time
@@ -341,6 +351,24 @@ def main(argv=None):
                     "stalling the running batch; 0 (default) admits "
                     "whole prompts in one prefill.  Tokens stay "
                     "bit-identical either way (exact chunked prefill)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="engine mode: per-request deadline in seconds "
+                    "from submit — expired requests (queued or decoding) "
+                    "retire with status deadline_exceeded; 0 (default) "
+                    "disables deadlines")
+    ap.add_argument("--queue-depth", type=int, default=0,
+                    help="engine mode: bounded submission queue — a "
+                    "submit beyond this depth is rejected (EngineSaturated "
+                    "with a retry-after hint; the trace driver records it "
+                    "as status shed); 0 (default) queues unbounded")
+    ap.add_argument("--fail-at-round", action="append", default=[],
+                    metavar="ROUND:STAGE[:COUNT]",
+                    help="engine mode: inject COUNT failures (default 1) "
+                    "at a scheduling-round stage point, stage in "
+                    "{admit, ingest, burst, retire} — a failed burst "
+                    "retries with backoff, a poisoned request is isolated "
+                    "with status failed; repeatable (same spec format as "
+                    "launch.quantize --fail-at)")
     ap.add_argument("--kv-bits", type=int, default=None,
                     help="KV-cache precision: 0 = activation dtype "
                     "(default), 8 = int8 codes + per-token scales, 2 = "
@@ -413,18 +441,25 @@ def main(argv=None):
         if not cfg.kv_bits:
             ap.error("--mode engine pages *quantized* KV codes — pass "
                      "--kv-bits 8 or --kv-bits 2")
+        from repro.runtime.fault import FaultPlan
+
         reqs = [ServeRequest(
             tokens=prompts[i].tolist(),
             max_new_tokens=args.gen,
             sampling=SamplingParams(temperature=args.temperature,
-                                    seed=args.seed + i),
+                                    seed=args.seed + i,
+                                    deadline_s=args.deadline_s),
         ) for i in range(args.batch)]
         need = -(-(args.prompt_len + args.gen) // model.codec.page_tokens)
+        plan = (FaultPlan.parse(args.fail_at_round)
+                if args.fail_at_round else None)
         engine = Engine(model, params, max_slots=args.max_slots,
                         n_pages=args.n_pages,
                         max_pages_per_request=max(need, 1),
                         burst_steps=args.burst_steps,
-                        prefill_chunk=args.prefill_chunk or None)
+                        prefill_chunk=args.prefill_chunk or None,
+                        queue_depth=args.queue_depth or None,
+                        fault_plan=plan)
         stats = run_trace(engine, poisson_trace(
             reqs, rate=args.arrival_rate, seed=args.seed))
         admit = ("chunked (%d tokens/chunk)" % engine.prefill_chunk
@@ -440,8 +475,25 @@ def main(argv=None):
               f"admission stall {stats['admission_stall_s']:.2f}s; "
               f"free pages after drain: {engine.pools.free_pages()}"
               f"/{args.n_pages}")
-        first = stats["outputs"][0]
-        print("sample:", first.tokens[:16])
+        print(f"statuses: {stats['statuses']}; "
+              f"preemptions: {stats['n_preemptions']} "
+              f"({stats['n_preempted_requests']} requests); "
+              f"shed: {stats['n_shed']}; deadline: {stats['n_deadline']}; "
+              f"failed: {stats['n_failed']}")
+        if engine.events.events:
+            print(f"engine events: "
+                  f"{dict(collections.Counter(engine.events.kinds()))}")
+        # every submitted request must have reached a definite terminal
+        # status — zero hangs is the overload contract, CI asserts on it
+        assert stats["n_requests"] == args.batch, \
+            (f"{args.batch - stats['n_requests']} of {args.batch} requests "
+             "never reached a terminal status")
+        engine.pools.assert_quiescent()
+        print(f"all {args.batch} requests terminal; pages quiescent")
+        first = next((o for o in stats["outputs"].values()
+                      if o.finished_ok), None)
+        if first is not None:
+            print("sample:", first.tokens[:16])
         return stats
 
     key = (jax.random.key(args.seed) if args.temperature > 0.0 else None)

@@ -779,9 +779,16 @@ class Model:
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, tokens, *, media=None, frames=None,
-                cache_len: Optional[int] = None):
+                cache_len: Optional[int] = None, logits: bool = True):
         """Returns (last_logits (B, V), cache). Cache length ``cache_len``
-        (defaults to T; quantized caches round up to a kv_chunk multiple)."""
+        (defaults to T; quantized caches round up to a kv_chunk multiple).
+
+        ``logits=False`` is the resume-ingest entry for the serve engine's
+        preemption path: re-admitting a preempted request replays the
+        prompt through this exact prefill to rebuild its KV pages bitwise,
+        but its token 0 was already drawn before preemption — skipping the
+        head projection drops the one vocab-sized matmul the resume would
+        otherwise waste (returns ``(None, cache)``)."""
         cfg, ctx = self.cfg, self.ctx
         b, t = tokens.shape
         s = self._cache_len(cache_len or t)
@@ -813,13 +820,13 @@ class Model:
 
         x, group_caches = jax.lax.scan(body, x, params["groups"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = self.head_logits(params, x[:, -1])
+        out = self.head_logits(params, x[:, -1]) if logits else None
         cache = {"groups": group_caches}
         if caches_prefix:
             cache["prefix"] = caches_prefix
         if cfg.family == "encdec":
             cache["media"] = media
-        return logits, cache
+        return out, cache
 
     def init_cache(self, batch: int, cache_len: int, *, media=None):
         """Zero cache for pure-decode lowering (decode_32k / long_500k)."""

@@ -40,6 +40,13 @@ class InjectedFailure(RuntimeError):
 
 STAGES = ("capture", "solve", "apply", "pack")
 
+# Serving-engine stage points (repro.serving.engine): one scheduling round
+# visits admit -> ingest -> burst -> retire, and the engine calls
+# ``FaultPlan.check(round, stage)`` at each — same plan object, same CLI
+# spec format (``ROUND:STAGE[:COUNT]`` via ``--fail-at-round``), so the
+# quantize-side and serve-side fault matrices share one vocabulary.
+SERVE_STAGES = ("admit", "ingest", "burst", "retire")
+
 
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
@@ -104,7 +111,13 @@ class FaultPlan:
     ``apply`` stages — ``(layer, stage, batch)``.  ``check`` is called by
     ``RSQPipeline.stage_point`` right before the stage's device work is
     dispatched; an armed point raises ``exc`` (default
-    :class:`InjectedFailure`) and records the firing in ``fired``."""
+    :class:`InjectedFailure`) and records the firing in ``fired``.
+
+    The serving engine reuses the same plan with ``layer`` meaning the
+    scheduling *round* and ``stage`` one of :data:`SERVE_STAGES` — every
+    check happens host-side before the stage's device dispatch, so state
+    (pools, slot rows) is untouched when an injected failure fires and a
+    retry re-runs the stage from identical inputs."""
 
     fail_at: dict
     exc: type = InjectedFailure
@@ -114,8 +127,9 @@ class FaultPlan:
         self.fail_at = dict(self.fail_at)
         for key in self.fail_at:
             stage = key[1]
-            if stage not in STAGES:
-                raise ValueError(f"unknown stage {stage!r}; one of {STAGES}")
+            if stage not in STAGES + SERVE_STAGES:
+                raise ValueError(f"unknown stage {stage!r}; one of "
+                                 f"{STAGES + SERVE_STAGES}")
 
     def check(self, layer: int, stage: str, batch: Optional[int] = None
               ) -> None:

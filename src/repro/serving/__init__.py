@@ -1,8 +1,14 @@
 from repro.serving.engine import (  # noqa: F401
     Engine,
+    EngineSaturated,
+    EngineStuck,
     RequestOutput,
     SamplingParams,
     ServeRequest,
 )
-from repro.serving.paged import PagedPools  # noqa: F401
+from repro.serving.paged import (  # noqa: F401
+    PageAccountingError,
+    PageAllocatorExhausted,
+    PagedPools,
+)
 from repro.serving.trace import poisson_trace, run_trace  # noqa: F401

@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -99,27 +100,58 @@ class PagedPools:
                 cache["prefix"])
         self.free = jnp.arange(1, total, dtype=jnp.int32)
         self.top = jnp.int32(n_pages)
+        # host-side mirror of the allocated set: preemption makes
+        # page-accounting bugs (double release, leaked reservations) easy
+        # to write, so every alloc/release is cross-checked here and a
+        # violation raises PageAccountingError instead of silently
+        # corrupting the device free stack
+        self._live: set[int] = set()
 
     def free_pages(self) -> int:
         return int(self.top)
+
+    def occupancy(self) -> float:
+        """Live fraction of the pool (0.0 empty .. 1.0 full) — the
+        watermark signal the engine's admission control reads."""
+        return 1.0 - self.free_pages() / self.n_pages
 
     def resident_bytes(self) -> int:
         return sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree.leaves(self.pools))
 
+    def sizing(self, prompt_len: int, max_new: int) -> str:
+        """One sentence of request sizing math — the single source of the
+        text shared by ``Engine.submit``'s fail-fast / page-table errors
+        and the allocator's exhaustion error (they used to duplicate
+        it)."""
+        need = -(-(prompt_len + max_new) // self.page)
+        return (f"{prompt_len} prompt + {max_new} new tokens at "
+                f"{self.page}/page = {need} pages")
+
     def exhausted(self, n: int, *, context: str = "",
-                  have: int | None = None) -> "PageAllocatorExhausted":
+                  have: int | None = None,
+                  retry_after_s: float | None = None
+                  ) -> "PageAllocatorExhausted":
         """Build the actionable sizing error for an allocation of ``n``
         pages that cannot be satisfied — shared by ``alloc`` (runtime
         exhaustion) and ``Engine.submit`` (fail-fast on requests that can
-        never fit, where ``have`` is the pool capacity)."""
+        never fit, where ``have`` is the pool capacity).  The message
+        always carries the live occupancy; the engine passes a
+        ``retry_after_s`` hint when retirements will free pages."""
         have = self.free_pages() if have is None else have
-        return PageAllocatorExhausted(
+        occ = 1.0 - have / self.n_pages
+        hint = (f"  Retry after ~{retry_after_s:.2f}s."
+                if retry_after_s is not None else "")
+        err = PageAllocatorExhausted(
             f"page allocator exhausted{context}: need {n} pages, "
-            f"{have} of {self.n_pages} free (page = {self.page} "
+            f"{have} of {self.n_pages} free (occupancy "
+            f"{occ:.0%}, page = {self.page} "
             f"tokens).  Retire requests, raise n_pages (one page is "
             f"~{self.page_bytes() / 1e3:.1f}KB across all layers), or "
-            f"lower max_new_tokens/prompt lengths.")
+            f"lower max_new_tokens/prompt lengths.{hint}")
+        err.need, err.have, err.occupancy = n, have, occ
+        err.retry_after_s = retry_after_s
+        return err
 
     def alloc(self, n: int, *, context: str = "") -> jax.Array:
         """Reserve ``n`` pages; raises with the actionable sizing math on
@@ -127,13 +159,48 @@ class PagedPools:
         if n > self.free_pages():
             raise self.exhausted(n, context=context)
         self.top, ids = _alloc(self.free, self.top, n)
+        for i in np.asarray(ids).tolist():
+            if i in self._live or i == 0:  # pragma: no cover - drift guard
+                raise PageAccountingError(
+                    f"allocator handed out page {i} which is "
+                    f"{'the trash page' if i == 0 else 'already live'} — "
+                    "free-stack accounting has drifted")
+            self._live.add(i)
         return ids
 
     def release(self, ids) -> None:
         if len(ids) == 0:
             return
+        ids_host = np.asarray(ids).tolist()
+        for i in ids_host:
+            if i == 0:
+                raise PageAccountingError(
+                    "attempt to release the reserved trash page (id 0)")
+            if i not in self._live:
+                raise PageAccountingError(
+                    f"double free: page {i} is not live "
+                    f"({self.free_pages()} of {self.n_pages} already free) "
+                    "— releasing a free page would alias it across "
+                    "requests on the next alloc")
+        if len(set(ids_host)) != len(ids_host):
+            raise PageAccountingError(
+                f"duplicate page ids in one release: {sorted(ids_host)}")
+        self._live.difference_update(ids_host)
         self.free, self.top = _release(self.free, self.top,
                                        jnp.asarray(ids, jnp.int32))
+
+    def assert_quiescent(self) -> None:
+        """Every allocated page is back on the free stack — ``Engine.
+        drain()`` calls this after the last retirement so any page leak
+        (or double count) fails loudly at the end of every drain, not as
+        mysterious exhaustion three traces later."""
+        if self._live or self.free_pages() != self.n_pages:
+            live = sorted(self._live)
+            tail = "..." if len(live) > 16 else ""
+            raise PageAccountingError(
+                f"page leak after drain: {self.free_pages()} of "
+                f"{self.n_pages} pages free, {len(live)} still marked "
+                f"live: {live[:16]}{tail}")
 
     def page_bytes(self) -> int:
         return self.resident_bytes() // (self.n_pages + 1)
@@ -146,4 +213,11 @@ class PagedPools:
 
 
 class PageAllocatorExhausted(RuntimeError):
-    pass
+    """Pool cannot satisfy an allocation; carries ``need`` / ``have`` /
+    ``occupancy`` / ``retry_after_s`` fields for programmatic callers."""
+
+
+class PageAccountingError(RuntimeError):
+    """Double free, trash-page release, or a post-drain page leak — the
+    free stack no longer matches the set of pages handed out, which would
+    alias pages across live requests on a later alloc."""

@@ -2,6 +2,9 @@
 
 Skipped cleanly (not a collection error) where hypothesis isn't installed;
 CI installs it (requirements-ci.txt), so both workflow legs run these."""
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -101,3 +104,49 @@ def test_prepared_hessian_is_spd(n, d, seed):
     h = prepare_hessian(2.0 * x.T @ x)
     eig = jnp.linalg.eigvalsh(h)
     assert float(eig.min()) > 0.0
+
+
+@functools.lru_cache(maxsize=1)
+def _paged_model():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = dataclasses.replace(get_config("qwen1.5-4b").reduced(),
+                              dtype="float32", kv_bits=8)
+    return build_model(cfg)
+
+
+@given(ops=st.lists(st.tuples(st.booleans(), st.integers(0, 7)),
+                    min_size=1, max_size=16),
+       n_pages=st.sampled_from([3, 5, 8]))
+@settings(**SETTINGS)
+def test_paged_pool_accounting_invariant(ops, n_pages):
+    """Random submit/preempt/retire-shaped alloc/release interleavings
+    never alias a page across live requests and always restore the free
+    list: ``free + live == n_pages`` after every op, live sets stay
+    disjoint, the trash page is never handed out, and releasing
+    everything leaves the pool quiescent (the engine-drain audit)."""
+    from repro.serving.paged import PagedPools, PageAllocatorExhausted
+    pools = PagedPools(_paged_model(), n_pages)
+    live: dict[int, set] = {}
+    next_key = 0
+    for is_alloc, k in ops:
+        if is_alloc:
+            n = k % 3 + 1
+            if n > pools.free_pages():
+                with pytest.raises(PageAllocatorExhausted):
+                    pools.alloc(n)
+            else:
+                ids = np.asarray(pools.alloc(n)).tolist()
+                held = set().union(*live.values()) if live else set()
+                assert not held & set(ids), "page aliased across requests"
+                assert 0 not in ids, "trash page handed out"
+                live[next_key] = set(ids)
+                next_key += 1
+        elif live:
+            key = sorted(live)[k % len(live)]
+            pools.release(np.asarray(sorted(live.pop(key)), np.int32))
+        n_live = sum(len(s) for s in live.values())
+        assert pools.free_pages() + n_live == n_pages
+    for key in sorted(live):
+        pools.release(np.asarray(sorted(live.pop(key)), np.int32))
+    pools.assert_quiescent()
